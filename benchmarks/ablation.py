@@ -1,0 +1,44 @@
+"""Table II — speedup from each co-optimization category alone vs combined.
+MCTS runs with the action space restricted to one category at a time."""
+from __future__ import annotations
+
+from repro.core.mcts import VanillaMCTS
+from repro.core.planner import analytic_cost_fn
+from repro.data import workloads
+from benchmarks.common import csv_line, time_plan
+
+CATEGORY_ACTIONS = {
+    "O1": ["R1-1", "R1-2", "R1-3", "R1-4-merge", "R1-4-split", "compact"],
+    # factorized inference intrinsically pushes the factored parts through
+    # the join (paper Fig. 1), so O2 includes split+push of the factors
+    "O2": ["R2-1", "R2-3", "R4-1-split", "R1-3"],
+    "O3": ["R3-1", "R3-2", "R3-3"],
+    "O4": ["R4-1-fuse", "R4-1-split", "R4-1-unfuse", "R4-2", "R4-4"],
+    "combined": None,  # full action space
+}
+
+QUERIES = ["rec_q1", "rec_q2", "retail_q1", "retail_q2"]
+
+
+def run(scale: float = 1.0, iterations: int = 35):
+    lines = []
+    for name in QUERIES:
+        w = workloads.ALL_WORKLOADS[name](scale=scale)
+        cost_fn = analytic_cost_fn(w.catalog, memory_budget=w.memory_budget)
+        base_t, _ = time_plan(w.plan, w.catalog)
+        lines.append(csv_line(f"tableII/{name}/unoptimized", base_t * 1e6,
+                              "speedup=1.0x"))
+        for cat_name, actions in CATEGORY_ACTIONS.items():
+            m = VanillaMCTS(w.catalog, cost_fn, iterations=iterations,
+                            seed=0, actions=actions)
+            best, _ = m.optimize(w.plan)
+            t, _ = time_plan(best, w.catalog)
+            lines.append(csv_line(
+                f"tableII/{name}/{cat_name}", t * 1e6,
+                f"speedup={base_t / max(t, 1e-9):.2f}x"))
+    return lines
+
+
+if __name__ == "__main__":
+    for ln in run():
+        print(ln)

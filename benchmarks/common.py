@@ -1,0 +1,50 @@
+"""Benchmark helpers: wall-clock measurement of compiled plans."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Tuple
+
+import jax
+
+from repro.core import ir
+from repro.core.executor import execute_node
+
+
+def time_plan(plan: ir.Plan, catalog: ir.Catalog, repeats: int = 3
+              ) -> Tuple[float, float]:
+    """Returns (median wall seconds, compile seconds)."""
+    tables = dict(catalog.tables)
+
+    @jax.jit
+    def run():
+        return execute_node(plan.root, tables, plan.registry)
+
+    t0 = time.perf_counter()
+    out = run()
+    jax.block_until_ready(out)
+    compile_s = time.perf_counter() - t0
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = run()
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2], compile_s
+
+
+def time_fn(fn: Callable, *args, repeats: int = 5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def csv_line(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

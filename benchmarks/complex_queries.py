@@ -1,0 +1,45 @@
+"""Table I — end-to-end latency of the 6 complex inference queries,
+un-optimized vs CACTUSDB (reusable-MCTS plan), measured wall clock on the
+compiled engine, plus peak-memory estimates (the paper's OOM axis)."""
+from __future__ import annotations
+
+from repro.core.cost import plan_peak_memory
+from repro.core.executor import execute
+from repro.core.planner import STRATEGIES, analytic_cost_fn, timed
+from repro.data import workloads
+from benchmarks.common import csv_line, time_plan
+
+QUERIES = ["rec_q1", "rec_q2", "rec_q3", "retail_q1", "retail_q2", "retail_q3"]
+
+
+def run(scale: float = 1.0, iterations: int = 50, verify: bool = True):
+    lines = []
+    for name in QUERIES:
+        w = workloads.ALL_WORKLOADS[name](scale=scale)
+        cost_fn = analytic_cost_fn(w.catalog, memory_budget=w.memory_budget)
+        base_t, _ = time_plan(w.plan, w.catalog)
+        opt_plan, stats = timed(STRATEGIES["vanilla_mcts"], w.plan, w.catalog,
+                                cost_fn=cost_fn, iterations=iterations, seed=0)
+        opt_t, _ = time_plan(opt_plan, w.catalog)
+        if verify:
+            import numpy as np
+            a = execute(w.plan, w.catalog).canonical()
+            b = execute(opt_plan, w.catalog).canonical()
+            for k in a:
+                np.testing.assert_allclose(a[k], b[k], rtol=5e-4, atol=5e-4)
+        mem0 = plan_peak_memory(w.plan, w.catalog) / 1e6
+        mem1 = plan_peak_memory(opt_plan, w.catalog) / 1e6
+        speed = base_t / max(opt_t, 1e-9)
+        lines.append(csv_line(
+            f"tableI/{name}/unoptimized", base_t * 1e6,
+            f"mem={mem0:.1f}MB"))
+        lines.append(csv_line(
+            f"tableI/{name}/cactusdb", opt_t * 1e6,
+            f"speedup={speed:.1f}x opt_s={stats['opt_seconds']:.2f} "
+            f"mem={mem1:.1f}MB verified=ok"))
+    return lines
+
+
+if __name__ == "__main__":
+    for ln in run():
+        print(ln)

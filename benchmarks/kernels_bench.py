@@ -1,0 +1,54 @@
+"""Per-kernel microbenchmarks (interpret mode on CPU — numbers demonstrate
+the harness; TPU wall-clock comes from the same entry points on hardware)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_line, time_fn
+
+rng = np.random.default_rng(0)
+
+
+def run():
+    lines = []
+    from repro.kernels.fused_dense import ops as fd
+    x = jnp.asarray(rng.standard_normal((256, 512)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((512, 256)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((256,)), jnp.float32)
+    t = time_fn(lambda: fd.fused_dense(x, w, b, "relu"))
+    fl = 2 * 256 * 512 * 256
+    lines.append(csv_line("kernel/fused_dense_256x512x256", t * 1e6,
+                          f"gflops={fl / t / 1e9:.2f}"))
+
+    from repro.kernels.block_matmul import ops as bm
+    t = time_fn(lambda: bm.block_matmul(x, w, 4))
+    lines.append(csv_line("kernel/block_matmul_256x512x256", t * 1e6,
+                          f"gflops={fl / t / 1e9:.2f}"))
+
+    from repro.kernels.decision_forest import ops as df
+    xf = jnp.asarray(rng.standard_normal((512, 29)), jnp.float32)
+    feat = jnp.asarray(rng.integers(0, 29, (50, 63)), jnp.int32)
+    th = jnp.asarray(rng.standard_normal((50, 63)), jnp.float32)
+    leaf = jnp.asarray(rng.standard_normal((50, 64)), jnp.float32)
+    t = time_fn(lambda: df.forest_predict(xf, feat, th, leaf))
+    lines.append(csv_line("kernel/forest_512rows_50trees_d6", t * 1e6,
+                          f"rows_per_s={512 / t:.0f}"))
+
+    from repro.kernels.flash_attention import ops as fa
+    q = jnp.asarray(rng.standard_normal((1, 4, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    t = time_fn(lambda: fa.flash_attention(q, k, k, True))
+    lines.append(csv_line("kernel/flash_attention_s256_h4", t * 1e6, ""))
+
+    from repro.kernels.flash_decode import ops as fdec
+    qd = jnp.asarray(rng.standard_normal((8, 4, 64)), jnp.float32)
+    kd = jnp.asarray(rng.standard_normal((8, 1024, 64)), jnp.float32)
+    t = time_fn(lambda: fdec.decode_attention(qd, kd, kd))
+    lines.append(csv_line("kernel/flash_decode_s1024", t * 1e6, ""))
+    return lines
+
+
+if __name__ == "__main__":
+    for ln in run():
+        print(ln)

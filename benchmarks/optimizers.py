@@ -1,0 +1,111 @@
+"""Table IV + Fig. 9/10 — optimizer strategies compared on a random-query
+fleet: un-optimized / arbitrary / heuristic / vanilla MCTS / reusable MCTS
+(two-model and one-model variants), with opt-vs-exec split, ID/OOD collision
+rates, and node-store storage overhead."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import optimizer as om
+from repro.core.mcts import ReusableMCTS
+from repro.core.planner import STRATEGIES, analytic_cost_fn, timed
+from repro.data import templates
+from benchmarks.common import csv_line
+
+
+def _train_embedder(n_train: int = 60, steps: int = 120, seed: int = 0,
+                    one_model: bool = False):
+    emb = om.init_embedder(seed)
+    ind, _ = templates.ood_split()
+    from repro.mlfuncs import builders
+    graphs = [g for g in (builders.sample_model(s).graph for s in range(40))
+              if g is not None]
+    om.train_model2vec(emb, graphs, steps=steps, batch=8, lr=1e-4)
+    plans, cats, costs = [], [], []
+    rng = np.random.default_rng(seed)
+    for i in range(n_train):
+        t = ind[int(rng.integers(0, len(ind)))]
+        p, c = templates.sample_query(t, seed=10_000 + i, scale=0.5)
+        plans.append(p)
+        cats.append(c)
+        costs.append(analytic_cost_fn(c)(p))
+    om.train_query2vec(emb, plans, cats, steps=steps, batch=8)
+    om.train_latency(emb, plans, cats, costs, steps=2 * steps, batch=12,
+                     one_model=one_model)
+    pred = np.array([emb.predict_latency(p, c) for p, c in zip(plans, cats)])
+    qe = om.q_error(pred, np.array(costs))
+    corr = float(np.corrcoef(np.log(pred + 1e-12), np.log(costs))[0, 1])
+    return emb, float(np.median(qe)), corr
+
+
+def run(n_id: int = 40, n_ood: int = 20, iterations: int = 20,
+        train_steps: int = 120):
+    lines = []
+    emb, med_q, corr = _train_embedder(steps=train_steps)
+    lines.append(csv_line("optbench/latency_model/two_model", 0.0,
+                          f"median_q_error={med_q:.2f} corr={corr:.3f}"))
+    emb1, med_q1, corr1 = _train_embedder(steps=train_steps, one_model=True,
+                                          seed=1)
+    lines.append(csv_line("optbench/latency_model/one_model", 0.0,
+                          f"median_q_error={med_q1:.2f} corr={corr1:.3f}"))
+
+    ind, ood = templates.ood_split()
+    rng = np.random.default_rng(7)
+    fleet = []
+    for i in range(n_id):
+        t = ind[int(rng.integers(0, len(ind)))]
+        fleet.append(("ID",) + templates.sample_query(t, seed=20_000 + i,
+                                                      scale=0.5))
+    for i in range(n_ood):
+        t = ood[int(rng.integers(0, len(ood)))]
+        fleet.append(("OOD",) + templates.sample_query(t, seed=30_000 + i,
+                                                       scale=0.5))
+
+    # classic strategies
+    for strat in ["unoptimized", "arbitrary", "heuristic", "vanilla_mcts"]:
+        opt_total, exec_total = 0.0, 0.0
+        for split, plan, cat in fleet:
+            cost_fn = analytic_cost_fn(cat)
+            p2, stats = timed(STRATEGIES[strat], plan, cat, cost_fn=cost_fn,
+                              iterations=iterations)
+            opt_total += stats["opt_seconds"]
+            exec_total += cost_fn(p2)
+        lines.append(csv_line(
+            f"tableIV/{strat}", opt_total / len(fleet) * 1e6,
+            f"opt_s={opt_total:.1f} exec_s={exec_total:.4f} "
+            f"total_s={opt_total + exec_total:.1f}"))
+
+    # reusable MCTS (two-model)
+    for label, embedder in [("reusable_two_model", emb),
+                            ("reusable_one_model", emb1)]:
+        r = ReusableMCTS(catalog_fn=None, embed_fn=embedder.embed,
+                         cost_fn_factory=lambda c: analytic_cost_fn(c),
+                         iterations=iterations,
+                         warm_iterations=max(iterations // 4, 4),
+                         sim_threshold=0.98, seed=0)
+        stats_by_split = {"ID": [0.0, 0.0, 0, 0], "OOD": [0.0, 0.0, 0, 0]}
+        for split, plan, cat in fleet:
+            t0 = time.perf_counter()
+            p2, stats = r.optimize(plan, cat)
+            dt = time.perf_counter() - t0
+            s = stats_by_split[split]
+            s[0] += dt
+            s[1] += analytic_cost_fn(cat)(p2)
+            s[2] += int(stats["collision"])
+            s[3] += 1
+        for split, (opt_s, exec_s, coll, n) in stats_by_split.items():
+            lines.append(csv_line(
+                f"tableIV/{label}/{split}", opt_s / max(n, 1) * 1e6,
+                f"opt_s={opt_s:.1f} exec_s={exec_s:.4f} "
+                f"collision_rate={coll / max(n, 1):.2f}"))
+        lines.append(csv_line(
+            f"tableIV/{label}/storage", 0.0,
+            f"nodes={len(r.nodes)} bytes={r.storage_bytes()}"))
+    return lines
+
+
+if __name__ == "__main__":
+    for ln in run():
+        print(ln)

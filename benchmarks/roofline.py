@@ -1,0 +1,72 @@
+"""EXPERIMENTS §Roofline — renders the per-(arch x shape x mesh) roofline
+table from the dry-run artifacts in experiments/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import csv_line
+
+
+def load_records(dryrun_dir: str = "experiments/final"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(dryrun_dir: str = "experiments/final"):
+    lines = []
+    for r in load_records(dryrun_dir):
+        tag = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r.get("status") == "skipped":
+            lines.append(csv_line(tag, 0.0, "skipped"))
+            continue
+        if r.get("status") != "ok":
+            lines.append(csv_line(tag, 0.0, f"error={r.get('error', '?')[:80]}"))
+            continue
+        rt = r["roofline"]
+        dom = r["bottleneck"]
+        step_us = max(rt.values()) * 1e6
+        lines.append(csv_line(
+            tag, step_us,
+            f"compute_s={rt['compute_s']:.4g} memory_s={rt['memory_s']:.4g} "
+            f"collective_s={rt['collective_s']:.4g} bottleneck={dom} "
+            f"useful_ratio={r.get('useful_ratio')} "
+            f"frac={r.get('roofline_fraction')} "
+            f"mem_gb={r.get('memory', {}).get('per_device_total_gb')}"))
+    return lines
+
+
+def markdown_table(dryrun_dir: str = "experiments/final",
+                   mesh: str = "16x16") -> str:
+    """The §Roofline table for EXPERIMENTS.md."""
+    rows = ["| arch | shape | compute_s | memory_s | collective_s | "
+            "bottleneck | MODEL_FLOPS | useful ratio | roofline frac | mem/dev GB |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in load_records(dryrun_dir):
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped | "
+                        f"— | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | ERROR | "
+                        f"— | — | — | — |")
+            continue
+        rt = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rt['compute_s']:.3g} | "
+            f"{rt['memory_s']:.3g} | {rt['collective_s']:.3g} | "
+            f"{r['bottleneck'].replace('_s', '')} | {r['model_flops']:.3g} | "
+            f"{r.get('useful_ratio')} | {r.get('roofline_fraction')} | "
+            f"{r.get('memory', {}).get('per_device_total_gb', '—')} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    for ln in run():
+        print(ln)

@@ -1,0 +1,59 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. ``--quick`` shrinks workload scales
+and MCTS budgets for CI-speed runs; the default configuration is what
+bench_output.txt records.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+    q = args.quick
+
+    from benchmarks import (ablation, complex_queries, kernels_bench,
+                            optimizers, random_queries, roofline,
+                            simplified_analytics)
+
+    suites = {
+        "kernels": lambda: kernels_bench.run(),
+        "complex_queries": lambda: complex_queries.run(
+            scale=0.5 if q else 1.0, iterations=15 if q else 40),
+        "ablation": lambda: ablation.run(
+            scale=0.5 if q else 1.0, iterations=10 if q else 25),
+        "simplified_analytics": lambda: simplified_analytics.run(
+            scales=(0.5,) if q else (1.0, 3.0), iterations=8 if q else 18),
+        "optimizers": lambda: optimizers.run(
+            n_id=8 if q else 24, n_ood=4 if q else 12,
+            iterations=6 if q else 15, train_steps=30 if q else 80),
+        "random_queries": lambda: random_queries.run(
+            n_queries=8 if q else 24, iterations=5 if q else 10),
+        "roofline": lambda: roofline.run(),
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            for line in fn():
+                print(line, flush=True)
+            print(f"# suite {name} done in {time.time() - t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:
+            print(f"# suite {name} FAILED", file=sys.stderr)
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Fig. 7 / Fig. 8 — retailing-simplified + analytics workloads at two
+scales, un-optimized vs optimized (incl. the R4-2 Pallas-backend plans)."""
+from __future__ import annotations
+
+from repro.core.planner import STRATEGIES, analytic_cost_fn
+from repro.data import workloads
+from benchmarks.common import csv_line, time_plan
+
+QUERIES = ["simple_q1", "simple_q2", "simple_q3",
+           "analytics_q1", "analytics_q2", "analytics_q3"]
+
+
+def run(scales=(1.0, 4.0), iterations: int = 25):
+    lines = []
+    for scale in scales:
+        for name in QUERIES:
+            w = workloads.ALL_WORKLOADS[name](scale=scale)
+            cost_fn = analytic_cost_fn(w.catalog, memory_budget=w.memory_budget)
+            base_t, _ = time_plan(w.plan, w.catalog)
+            opt_plan, _ = STRATEGIES["vanilla_mcts"](
+                w.plan, w.catalog, cost_fn=cost_fn, iterations=iterations,
+                seed=0)
+            opt_t, _ = time_plan(opt_plan, w.catalog)
+            lines.append(csv_line(
+                f"fig78/{name}@{scale:g}/unoptimized", base_t * 1e6, ""))
+            lines.append(csv_line(
+                f"fig78/{name}@{scale:g}/cactusdb", opt_t * 1e6,
+                f"speedup={base_t / max(opt_t, 1e-9):.2f}x"))
+    return lines
+
+
+if __name__ == "__main__":
+    for ln in run():
+        print(ln)

@@ -1,0 +1,86 @@
+"""Paper Appendix K: LLM inference queries — a zoo LM served behind a
+black-box ``llm_score`` ML function inside a SQL query. CACTUSDB factorizes
+the call and pushes it below the cross join (R4-1 + R1-3), slashing the
+number of LLM invocations exactly as the paper's token-cost reduction.
+
+    PYTHONPATH=src python examples/serve_llm_udf.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import ir
+from repro.core.executor import execute
+from repro.core.planner import analytic_cost_fn, optimize_vanilla_mcts
+from repro.mlfuncs import builders
+from repro.mlfuncs.functions import MLFunction
+from repro.mlfuncs.registry import Registry
+from repro.models import lm
+from repro.relational.table import Table
+
+
+def main():
+    # a zoo model standing in for the paper's gpt-3.5 endpoint
+    cfg = dataclasses.replace(get_smoke_config("granite-3-2b"), vocab=256)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    calls = {"n": 0}
+
+    def llm_summarize(feats):
+        """Black-box UDF: encode a feature row into an LM 'summary' score."""
+        calls["n"] += feats.shape[0]
+        toks = (jnp.abs(feats[:, :16]) * 37).astype(jnp.int32) % cfg.vocab
+        h = lm.forward(params, cfg, toks)
+        return h[:, -1, :8]  # summary embedding
+
+    rng = np.random.default_rng(0)
+    users = Table.from_columns({
+        "user_id": jnp.arange(24, dtype=jnp.int32),
+        "user_desc": jnp.asarray(rng.standard_normal((24, 16)), jnp.float32)})
+    movies = Table.from_columns({
+        "movie_id": jnp.arange(12, dtype=jnp.int32),
+        "lang_en": jnp.asarray(rng.integers(0, 2, 12), jnp.int32),
+        "movie_desc": jnp.asarray(rng.standard_normal((12, 16)), jnp.float32)})
+    catalog = ir.Catalog()
+    catalog.add("users", users)
+    catalog.add("movies", movies)
+
+    registry = Registry()
+    registry.register(MLFunction("llm_summarize", graph=None,
+                                 opaque_fn=llm_summarize, n_inputs=1))
+    registry.register(builders.two_tower("recommend", [8, 16, 8], [8, 16, 8],
+                                         seed=1))
+
+    # Appendix-K Q1: LLM-summarize both sides of a cross join, then score
+    q = ir.Project(
+        ir.Filter(ir.CrossJoin(ir.Scan("users"), ir.Scan("movies")),
+                  pred=ir.Cmp("==", ir.Col("lang_en"), ir.Const(1))),
+        outputs=(("score", ir.Call("recommend", (
+            ir.Call("llm_summarize", (ir.Col("user_desc"),)),
+            ir.Call("llm_summarize", (ir.Col("movie_desc"),))))),),
+        keep=("user_id", "movie_id"))
+    plan = ir.Plan(q, registry)
+
+    calls["n"] = 0
+    base = execute(plan, catalog).canonical()
+    naive_calls = calls["n"]
+
+    opt, stats = optimize_vanilla_mcts(plan, catalog,
+                                       cost_fn=analytic_cost_fn(catalog),
+                                       iterations=40, seed=0)
+    calls["n"] = 0
+    out = execute(opt, catalog).canonical()
+    opt_calls = calls["n"]
+    for k in base:
+        np.testing.assert_allclose(base[k], out[k], rtol=5e-4, atol=5e-4)
+    print(f"LLM rows summarized: naive={naive_calls}  optimized={opt_calls}  "
+          f"({naive_calls / max(opt_calls, 1):.1f}x fewer inferences, "
+          "same results)")
+    print("(paper Appendix K: pushing the LLM call below the cross join "
+          "avoids re-summarizing the same row per pair — 72.4% token cut)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""CACTUSDB core: three-level IR, co-optimization rules O1-O4, analytic cost
+model, plan executor, query embeddings, and the reusable MCTS optimizer."""
+from repro.core.ir import (
+    Expr, Col, Const, BinOp, Cmp, BoolOp, IsIn, IfExpr, Call,
+    RelNode, Scan, Filter, Project, Join, CrossJoin, Aggregate, Compact,
+    BlockedMatmul, ForestRelational, Plan, Catalog,
+)
+
+__all__ = [
+    "Expr", "Col", "Const", "BinOp", "Cmp", "BoolOp", "IsIn", "IfExpr", "Call",
+    "RelNode", "Scan", "Filter", "Project", "Join", "CrossJoin", "Aggregate",
+    "Compact", "BlockedMatmul", "ForestRelational", "Plan", "Catalog",
+]

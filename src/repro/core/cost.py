@@ -1,0 +1,183 @@
+"""Analytic cost model for physical plans.
+
+Costs each node by FLOPs + bytes moved against a device profile, walking the
+plan with the cardinality/capacity estimates from ir.infer. On TPU the
+*capacity* (static shape) drives cost, not the live-row count — which is
+exactly why compaction after selective filters matters (DESIGN.md Sec. 2).
+
+This model is the MCTS reward oracle for fast/deterministic paths; the
+learned latency predictor (core.embedding) plays the paper's Query2Vec role
+and is trained against measured wall-clock of compiled plans.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.core import ir
+from repro.mlfuncs.registry import Registry
+
+
+@dataclasses.dataclass
+class DeviceProfile:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12      # bf16 FLOP/s
+    hbm_bw: float = 819e9           # bytes/s
+    vmem_bw: float = 4.0e12         # effective on-chip bandwidth for fused ops
+    elem_bytes: int = 4
+    # fixed overhead per relational operator (dispatch/fusion boundary)
+    op_overhead_s: float = 2e-6
+
+
+CPU_PROFILE = DeviceProfile(name="cpu", peak_flops=2e11, hbm_bw=3e10,
+                            vmem_bw=2e11, op_overhead_s=5e-6)
+
+
+def _row_bytes(schema: Dict[str, int], profile: DeviceProfile) -> float:
+    return sum(max(d, 1) for d in schema.values()) * profile.elem_bytes
+
+
+def _time(flops: float, bytes_: float, profile: DeviceProfile) -> float:
+    return max(flops / profile.peak_flops, bytes_ / profile.hbm_bw) + profile.op_overhead_s
+
+
+def node_cost(node: ir.RelNode, registry: Registry, catalog: ir.Catalog,
+              profile: DeviceProfile) -> float:
+    """Recursive total plan cost in seconds (analytic)."""
+    total = sum(node_cost(c, registry, catalog, profile) for c in node.children())
+    total += _local_cost(node, registry, catalog, profile)
+    return total
+
+
+def _local_cost(node: ir.RelNode, registry: Registry, catalog: ir.Catalog,
+                profile: DeviceProfile) -> float:
+    if isinstance(node, ir.Scan):
+        return 0.0
+    if isinstance(node, ir.Filter):
+        ci = ir.infer(node.child, registry, catalog)
+        fl = ir.expr_flops(node.pred, ci.schema, registry) * ci.capacity
+        by = _row_bytes(ci.schema, profile) * ci.capacity
+        return _time(fl, by, profile)
+    if isinstance(node, ir.Compact):
+        ci = ir.infer(node.child, registry, catalog)
+        by = _row_bytes(ci.schema, profile) * (ci.capacity + node.capacity)
+        return _time(ci.capacity * 8.0, by, profile)  # sort + gather
+    if isinstance(node, ir.Project):
+        ci = ir.infer(node.child, registry, catalog)
+        fl = sum(ir.expr_flops(e, ci.schema, registry) for _, e in node.outputs)
+        fl *= ci.capacity
+        out = ir.infer(node, registry, catalog)
+        by = (_row_bytes(ci.schema, profile) + _row_bytes(out.schema, profile)) * ci.capacity
+        # parameter traffic: weights stream from HBM once per call
+        pb = 0.0
+        for _, e in node.outputs:
+            for c in _calls(e):
+                pb += registry.get(c.fn).param_bytes()
+        return _time(fl, by + pb, profile)
+    if isinstance(node, ir.Join):
+        li = ir.infer(node.left, registry, catalog)
+        ri = ir.infer(node.right, registry, catalog)
+        out = ir.infer(node, registry, catalog)
+        fl = (li.capacity + ri.capacity) * 32.0  # sort/searchsorted
+        by = (_row_bytes(li.schema, profile) * li.capacity
+              + _row_bytes(ri.schema, profile) * ri.capacity
+              + _row_bytes(out.schema, profile) * out.capacity)
+        return _time(fl, by, profile)
+    if isinstance(node, ir.CrossJoin):
+        out = ir.infer(node, registry, catalog)
+        by = 2.0 * _row_bytes(out.schema, profile) * out.capacity
+        return _time(out.capacity * 2.0, by, profile)
+    if isinstance(node, ir.Aggregate):
+        ci = ir.infer(node.child, registry, catalog)
+        fl = ci.capacity * (16.0 + 2.0 * len(node.aggs))
+        by = _row_bytes(ci.schema, profile) * ci.capacity
+        return _time(fl, by, profile)
+    if isinstance(node, ir.BlockedMatmul):
+        ci = ir.infer(node.child, registry, catalog)
+        fn = registry.get(node.fn)
+        fl = fn.flops_per_row([ci.schema[node.x_col]]) * ci.capacity
+        pb = fn.param_bytes()
+        xby = max(ci.schema[node.x_col], 1) * profile.elem_bytes * ci.capacity
+        if node.mode == "relational":
+            # streamed tile scan: x re-read per tile + per-tile op overhead
+            xby *= node.n_tiles
+            extra = node.n_tiles * profile.op_overhead_s
+        else:
+            extra = 0.0
+        bw = profile.vmem_bw if node.backend == "pallas" else profile.hbm_bw
+        t = max(fl / profile.peak_flops, (pb + 2 * xby) / bw)
+        return t + profile.op_overhead_s + extra
+    if isinstance(node, ir.ForestRelational):
+        ci = ir.infer(node.child, registry, catalog)
+        fn = registry.get(node.fn)
+        fl = fn.flops_per_row([ci.schema[node.x_col]]) * ci.capacity
+        pb = fn.param_bytes()
+        xby = max(ci.schema[node.x_col], 1) * profile.elem_bytes * ci.capacity
+        if node.mode == "relational":
+            p = fn.graph.nodes[0].atom.params
+            xby *= p["feat"].shape[0]
+        bw = profile.vmem_bw if node.backend == "pallas" else profile.hbm_bw
+        return max(fl / profile.peak_flops, (pb + xby) / bw) + profile.op_overhead_s
+    raise TypeError(type(node))
+
+
+def _calls(e: ir.Expr):
+    if isinstance(e, ir.Call):
+        yield e
+    for c in e.children():
+        yield from _calls(c)
+
+
+# ---------------------------------------------------------------------------
+# memory (peak working set) — the paper's OOM axis (Table I, Fig. 6)
+# ---------------------------------------------------------------------------
+
+def node_mem(node: ir.RelNode, registry: Registry, catalog: ir.Catalog,
+             profile: DeviceProfile) -> float:
+    """Peak bytes over the plan (max across operators)."""
+    peak = max((node_mem(c, registry, catalog, profile) for c in node.children()),
+               default=0.0)
+    return max(peak, _local_mem(node, registry, catalog, profile))
+
+
+def _local_mem(node, registry, catalog, profile):
+    if isinstance(node, ir.Scan):
+        st = catalog.stats[node.table]
+        return _row_bytes({c: s.dim for c, s in st.columns.items()}, profile) * st.capacity
+    out = ir.infer(node, registry, catalog)
+    base = _row_bytes(out.schema, profile) * out.capacity
+    if isinstance(node, ir.Project):
+        pb = 0.0
+        for _, e in node.outputs:
+            for c in _calls(e):
+                pb += registry.get(c.fn).param_bytes()
+        return base + pb
+    if isinstance(node, (ir.BlockedMatmul, ir.ForestRelational)):
+        fn = registry.get(node.fn)
+        n_tiles = getattr(node, "n_tiles", None)
+        if n_tiles is None:  # forest: per-tree streaming
+            p = fn.graph.nodes[0].atom.params
+            n_tiles = max(int(p["feat"].shape[0]), 1)
+        # streamed: only one tile resident at a time
+        return base + fn.param_bytes() / n_tiles
+    return base
+
+
+def plan_peak_memory(plan: ir.Plan, catalog: ir.Catalog,
+                     profile: DeviceProfile | None = None) -> float:
+    profile = profile or DeviceProfile()
+    return node_mem(plan.root, plan.registry, catalog, profile)
+
+
+def plan_cost(plan: ir.Plan, catalog: ir.Catalog,
+              profile: DeviceProfile | None = None,
+              memory_budget: float | None = None) -> float:
+    """Analytic plan latency; plans whose working set exceeds the memory
+    budget pay a paging/OOM penalty (mirrors the paper's OOM failures)."""
+    profile = profile or DeviceProfile()
+    t = node_cost(plan.root, plan.registry, catalog, profile)
+    if memory_budget is not None:
+        peak = plan_peak_memory(plan, catalog, profile)
+        if peak > memory_budget:
+            t *= 1.0 + 20.0 * (peak / memory_budget - 1.0)
+    return t

@@ -1,0 +1,387 @@
+"""Model2Vec + Query2Vec (paper Sec. IV-B) in pure JAX.
+
+Model2Vec embeds a bottom-level IR (BFS node sequence; features E_mlType,
+E_mlFlops, E_mlDims) with a small transformer into a 64-d expression vector
+E_expr.
+
+Query2Vec builds one 393-d vector per top-level IR node per Eq. 1:
+  E_o(64) ‖ E_j(64) ‖ E_t(64) ‖ E_p(64+8+1) ‖ E_h(64) ‖ E_s(64)  = 393
+where the predicate's 64-d filter embedding carries either a column
+embedding (native SQL filters, selectivity via E_h/E_s) or the Model2Vec
+E_expr (AI/ML filters — selectivity learned implicitly, Sec. IV-B1), then
+runs a tree transformer with height encodings and mean-pools to the final
+393-d state embedding.
+
+Training: Task-1 contrastive loss (Eq. 2-3) over WL-kernel-mined pairs;
+Task-2 latency head (4-layer FFNN, MSE on log latency). The two-model
+strategy trains them on separate copies (joint training = one-model
+baseline, kept for the Sec. V-E comparison).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ir
+from repro.mlfuncs.functions import MLGraph
+
+# -- dimensions (paper Sec. IV-B2) ------------------------------------------
+EXPR_DIM = 64
+NODE_DIM = 393           # 5*64 + (64+8+1)
+D_MODEL = 384            # transformer width (6 heads x 64)
+MAX_GRAPH_NODES = 64
+MAX_PLAN_NODES = 32
+GRAPH_FEAT = 24 + 2 + 4  # type one-hot + [log flops, log dim] + dim histogram
+N_KINDS = 24
+_KINDS = ["matmul", "bias", "act", "concat", "cossim", "dot", "dist", "embed",
+          "scale", "onehot", "forest", "fused_dense", "binarize", "slice",
+          "add", "mul", "sqrt", "argmin", "const_vec", "opaque"]
+_OPS = [">", "<", ">=", "<=", "==", "!=", "and", "or", "not", "isin"]
+
+
+def _hash(s: str, mod: int) -> int:
+    h = 2166136261
+    for ch in s:
+        h = ((h ^ ord(ch)) * 16777619) & 0xFFFFFFFF
+    return h % mod
+
+
+# ===========================================================================
+# tiny transformer
+# ===========================================================================
+
+def _init_linear(rng, din, dout):
+    k1, _ = jax.random.split(rng)
+    return {"w": jax.random.normal(k1, (din, dout)) / np.sqrt(din),
+            "b": jnp.zeros((dout,))}
+
+
+def _linear(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def _init_block(rng, d, heads):
+    ks = jax.random.split(rng, 6)
+    return {
+        "qkv": _init_linear(ks[0], d, 3 * d),
+        "o": _init_linear(ks[1], d, d),
+        "m1": _init_linear(ks[2], d, 4 * d),
+        "m2": _init_linear(ks[3], 4 * d, d),
+        "ln1": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+        "ln2": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+    }
+
+
+def _ln(p, x):
+    mu = x.mean(-1, keepdims=True)
+    sd = jnp.sqrt(((x - mu) ** 2).mean(-1, keepdims=True) + 1e-6)
+    return (x - mu) / sd * p["g"] + p["b"]
+
+
+def _block(p, x, mask, heads):
+    # x: [n, d]; mask: [n] bool
+    n, d = x.shape
+    h = _ln(p["ln1"], x)
+    qkv = _linear(p["qkv"], h).reshape(n, 3, heads, d // heads)
+    q, k, v = qkv[:, 0], qkv[:, 1], qkv[:, 2]
+    s = jnp.einsum("nhd,mhd->hnm", q, k) / np.sqrt(d // heads)
+    s = jnp.where(mask[None, None, :], s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("hnm,mhd->nhd", a, v).reshape(n, d)
+    x = x + _linear(p["o"], o)
+    h = _ln(p["ln2"], x)
+    x = x + _linear(p["m2"], jax.nn.gelu(_linear(p["m1"], h)))
+    return x
+
+
+# ===========================================================================
+# Model2Vec
+# ===========================================================================
+
+def init_model2vec(rng) -> Dict:
+    ks = jax.random.split(rng, 5)
+    return {
+        "in": _init_linear(ks[0], GRAPH_FEAT, EXPR_DIM),
+        "blocks": [_init_block(ks[1], EXPR_DIM, 4),
+                   _init_block(ks[2], EXPR_DIM, 4)],
+        "out": _init_linear(ks[3], EXPR_DIM, EXPR_DIM),
+    }
+
+
+@functools.partial(jax.jit, static_argnames=())
+def model2vec_apply(params, feats, mask):
+    x = _linear(params["in"], feats)
+    for blk in params["blocks"]:
+        x = _block(blk, x, mask, 4)
+    m = mask[:, None].astype(x.dtype)
+    pooled = (x * m).sum(0) / jnp.maximum(m.sum(), 1.0)
+    out = _linear(params["out"], pooled)
+    return out / (jnp.linalg.norm(out) + 1e-8)
+
+
+def featurize_graph(g: Optional[MLGraph], in_dims: Optional[List[int]] = None
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """BFS node features: E_mlType (one-hot), E_mlFlops, E_mlDims."""
+    feats = np.zeros((MAX_GRAPH_NODES, GRAPH_FEAT), np.float32)
+    mask = np.zeros((MAX_GRAPH_NODES,), bool)
+    if g is None:
+        feats[0, N_KINDS - 1] = 1.0  # opaque marker
+        mask[0] = True
+        return feats, mask
+    in_dims = in_dims or [64] * g.n_inputs
+    dims = g.infer_dims(in_dims)
+    # BFS from output (paper: breadth-first traversal)
+    order, frontier, seen = [], [g.out], set()
+    by_id = {n.id: n for n in g.nodes}
+    while frontier:
+        nxt = []
+        for nid in frontier:
+            if nid in seen:
+                continue
+            seen.add(nid)
+            order.append(nid)
+            for r in by_id[nid].args:
+                if r[0] == "node":
+                    nxt.append(r[1])
+        frontier = nxt
+    for i, nid in enumerate(order[:MAX_GRAPH_NODES]):
+        n = by_id[nid]
+        arg_dims = [in_dims[r[1]] if r[0] == "in" else dims[r[1]] for r in n.args]
+        kidx = _KINDS.index(n.atom.kind) if n.atom.kind in _KINDS else N_KINDS - 1
+        feats[i, kidx] = 1.0
+        fl = max(n.atom.flops_per_row(arg_dims), 1.0)
+        feats[i, N_KINDS] = np.log1p(fl) / 10.0
+        feats[i, N_KINDS + 1] = np.log1p(max(dims[nid], 1)) / 10.0
+        d = max(dims[nid], 1)
+        feats[i, N_KINDS + 2 + min(3, int(np.log2(d) // 3))] = 1.0
+        mask[i] = True
+    return feats, mask
+
+
+# ===========================================================================
+# Query2Vec
+# ===========================================================================
+
+def init_query2vec(rng) -> Dict:
+    ks = jax.random.split(rng, 12)
+    return {
+        "op_embed": jax.random.normal(ks[0], (12, 64)) * 0.1,       # E_o
+        "join_embed": jax.random.normal(ks[1], (4, 64)) * 0.1,      # E_j
+        "table_embed": jax.random.normal(ks[2], (64, 64)) * 0.1,    # E_t
+        "col_embed": jax.random.normal(ks[3], (64, 64)) * 0.1,      # E_p filter
+        "expr_proj": _init_linear(ks[4], EXPR_DIM, 64),             # E_expr -> filter slot
+        "pred_op": jax.random.normal(ks[5], (11, 8)) * 0.1,         # E_p op
+        "hist": _init_linear(ks[6], 8, 64),                         # E_h
+        "sample": _init_linear(ks[7], 64, 64),                      # E_s
+        "in": _init_linear(ks[8], NODE_DIM, D_MODEL),
+        "height": jax.random.normal(ks[9], (16, D_MODEL)) * 0.02,
+        "blocks": [_init_block(ks[10], D_MODEL, 6),
+                   _init_block(ks[11], D_MODEL, 6)],
+        "out": _init_linear(jax.random.split(ks[0])[0], D_MODEL, NODE_DIM),
+    }
+
+
+_REL_OPS = ["scan", "filter", "project", "join", "crossjoin", "aggregate",
+            "compact", "blockedmm", "forestrel", "union", "other"]
+
+
+@dataclasses.dataclass
+class PlanFeatures:
+    """Host-side featurization of one plan (numpy)."""
+    op_ids: np.ndarray       # [P] int
+    join_ids: np.ndarray     # [P] int
+    table_ids: np.ndarray    # [P] int
+    col_ids: np.ndarray      # [P] int
+    has_expr: np.ndarray     # [P] float (1 -> use E_expr in the filter slot)
+    expr_feats: np.ndarray   # [P, MAX_GRAPH_NODES, GRAPH_FEAT]
+    expr_masks: np.ndarray   # [P, MAX_GRAPH_NODES]
+    pred_ops: np.ndarray     # [P] int
+    pred_vals: np.ndarray    # [P] float
+    hists: np.ndarray        # [P, 8]
+    samples: np.ndarray      # [P, 64]
+    heights: np.ndarray      # [P] int
+    mask: np.ndarray         # [P] bool
+
+
+def featurize_plan(plan: ir.Plan, catalog: ir.Catalog) -> PlanFeatures:
+    P = MAX_PLAN_NODES
+    f = PlanFeatures(
+        op_ids=np.zeros(P, np.int32), join_ids=np.zeros(P, np.int32),
+        table_ids=np.zeros(P, np.int32), col_ids=np.zeros(P, np.int32),
+        has_expr=np.zeros(P, np.float32),
+        expr_feats=np.zeros((P, MAX_GRAPH_NODES, GRAPH_FEAT), np.float32),
+        expr_masks=np.zeros((P, MAX_GRAPH_NODES), bool),
+        pred_ops=np.zeros(P, np.int32), pred_vals=np.zeros(P, np.float32),
+        hists=np.zeros((P, 8), np.float32), samples=np.zeros((P, 64), np.float32),
+        heights=np.zeros(P, np.int32), mask=np.zeros(P, bool))
+    i = [0]
+
+    def first_call(e: ir.Expr):
+        if isinstance(e, ir.Call):
+            return e
+        for c in e.children():
+            r = first_call(c)
+            if r is not None:
+                return r
+        return None
+
+    def visit(n: ir.RelNode, height: int):
+        # in-order: left subtree, node, right subtree (paper Sec. IV-B1)
+        kids = n.children()
+        if kids:
+            visit(kids[0], height + 1)
+        k = i[0]
+        if k < P:
+            if isinstance(n, ir.Scan):
+                op = "scan"
+                f.table_ids[k] = _hash(n.table, 64)
+                st = catalog.stats.get(n.table)
+                if st is not None and st.sample_bitmap is not None:
+                    f.samples[k] = st.sample_bitmap
+            elif isinstance(n, ir.Filter):
+                op = "filter"
+                _pred_features(f, k, n.pred, plan.registry, catalog)
+            elif isinstance(n, ir.Project):
+                op = "project"
+                calls = [c for _, e in n.outputs for c in [first_call(e)] if c]
+                if calls:
+                    _call_features(f, k, calls[0], plan.registry)
+            elif isinstance(n, ir.Join):
+                op = "join"
+                f.join_ids[k] = 1
+                f.col_ids[k] = _hash(n.left_key, 64)
+            elif isinstance(n, ir.CrossJoin):
+                op = "crossjoin"
+                f.join_ids[k] = 2
+            elif isinstance(n, ir.Aggregate):
+                op = "aggregate"
+                f.col_ids[k] = _hash(n.key, 64)
+            elif isinstance(n, ir.Compact):
+                op = "compact"
+                f.pred_vals[k] = np.log1p(n.capacity) / 20.0
+            elif isinstance(n, ir.BlockedMatmul):
+                op = "blockedmm"
+                fn = plan.registry.get(n.fn)
+                ef, em = featurize_graph(fn.graph)
+                f.expr_feats[k], f.expr_masks[k] = ef, em
+                f.has_expr[k] = 1.0
+                f.pred_vals[k] = n.n_tiles / 16.0 + (0.5 if n.backend == "pallas" else 0.0)
+            elif isinstance(n, ir.ForestRelational):
+                op = "forestrel"
+                fn = plan.registry.get(n.fn)
+                ef, em = featurize_graph(fn.graph)
+                f.expr_feats[k], f.expr_masks[k] = ef, em
+                f.has_expr[k] = 1.0
+            else:
+                op = "other"
+            f.op_ids[k] = _REL_OPS.index(op)
+            f.heights[k] = min(height, 15)
+            f.mask[k] = True
+        i[0] += 1
+        for c in kids[1:]:
+            visit(c, height + 1)
+
+    def _pred_features(f, k, pred, registry, catalog):
+        if isinstance(pred, ir.BoolOp) and pred.args:
+            pred_inner = pred.args[0]
+        else:
+            pred_inner = pred
+        if isinstance(pred_inner, ir.Cmp):
+            f.pred_ops[k] = _OPS.index(pred_inner.op)
+            if isinstance(pred_inner.b, ir.Const):
+                f.pred_vals[k] = np.tanh(pred_inner.b.value / 100.0)
+            c = first_call(pred_inner)
+            if c is not None:
+                _call_features(f, k, c, registry)
+            elif isinstance(pred_inner.a, ir.Col):
+                f.col_ids[k] = _hash(pred_inner.a.name, 64)
+                for st in catalog.stats.values():
+                    cs = st.columns.get(pred_inner.a.name)
+                    if cs is not None and cs.histogram is not None:
+                        f.hists[k] = cs.histogram
+                        break
+        elif isinstance(pred_inner, ir.IsIn):
+            f.pred_ops[k] = _OPS.index("isin")
+            f.pred_vals[k] = len(pred_inner.values) / 16.0
+            if isinstance(pred_inner.a, ir.Col):
+                f.col_ids[k] = _hash(pred_inner.a.name, 64)
+
+    def _call_features(f, k, call: ir.Call, registry):
+        fn = registry.get(call.fn)
+        ef, em = featurize_graph(fn.graph)
+        f.expr_feats[k], f.expr_masks[k] = ef, em
+        f.has_expr[k] = 1.0
+
+    visit(plan.root, 0)
+    return f
+
+
+@jax.jit
+def query2vec_apply(params: Dict, m2v_params: Dict, pf_arrays) -> jax.Array:
+    (op_ids, join_ids, table_ids, col_ids, has_expr, expr_feats, expr_masks,
+     pred_ops, pred_vals, hists, samples, heights, mask) = pf_arrays
+    e_o = params["op_embed"][op_ids]                        # [P, 64]
+    e_j = params["join_embed"][join_ids]
+    e_t = params["table_embed"][table_ids]
+    e_expr = jax.vmap(lambda ft, mk: model2vec_apply(m2v_params, ft, mk))(
+        expr_feats, expr_masks)                             # [P, 64]
+    col_vec = params["col_embed"][col_ids]
+    filt = jnp.where(has_expr[:, None] > 0,
+                     _linear(params["expr_proj"], e_expr), col_vec)
+    e_p = jnp.concatenate([filt, params["pred_op"][pred_ops],
+                           pred_vals[:, None]], axis=1)     # [P, 73]
+    e_h = _linear(params["hist"], hists)
+    e_s = _linear(params["sample"], samples)
+    node = jnp.concatenate([e_o, e_j, e_t, e_p, e_h, e_s], axis=1)  # [P, 393]
+    x = _linear(params["in"], node) + params["height"][heights]
+    for blk in params["blocks"]:
+        x = _block(blk, x, mask, 6)
+    m = mask[:, None].astype(x.dtype)
+    pooled = (x * m).sum(0) / jnp.maximum(m.sum(), 1.0)
+    out = _linear(params["out"], pooled)
+    return out / (jnp.linalg.norm(out) + 1e-8)
+
+
+def pf_to_arrays(pf: PlanFeatures):
+    return (pf.op_ids, pf.join_ids, pf.table_ids, pf.col_ids, pf.has_expr,
+            pf.expr_feats, pf.expr_masks, pf.pred_ops, pf.pred_vals, pf.hists,
+            pf.samples, pf.heights, pf.mask)
+
+
+# ===========================================================================
+# latency head (Task 2: 4-layer FFNN on the query embedding)
+# ===========================================================================
+
+def init_latency_head(rng) -> Dict:
+    ks = jax.random.split(rng, 4)
+    return {"l1": _init_linear(ks[0], NODE_DIM, 256),
+            "l2": _init_linear(ks[1], 256, 128),
+            "l3": _init_linear(ks[2], 128, 64),
+            "l4": _init_linear(ks[3], 64, 1)}
+
+
+def latency_apply(params: Dict, emb: jax.Array) -> jax.Array:
+    h = jax.nn.relu(_linear(params["l1"], emb))
+    h = jax.nn.relu(_linear(params["l2"], h))
+    h = jax.nn.relu(_linear(params["l3"], h))
+    return _linear(params["l4"], h)[..., 0]
+
+
+# ===========================================================================
+# losses (Eq. 2-4)
+# ===========================================================================
+
+def contrastive_loss(anchor, pos, neg, tau: float = 0.2):
+    """Eq. 3: -log exp(sim+ / tau) / (exp(sim- / tau) + exp(sim+ / tau))."""
+    sp = jnp.sum(anchor * pos, -1) / tau
+    sn = jnp.sum(anchor * neg, -1) / tau
+    return jnp.mean(-(sp - jnp.logaddexp(sp, sn)))
+
+
+def latency_loss(pred_log, true_log):
+    return jnp.mean((pred_log - true_log) ** 2)

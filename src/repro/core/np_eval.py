@@ -1,0 +1,51 @@
+"""Numpy evaluator for Call-free expressions — used by the optimizer to get
+exact selectivities of simple predicates over base tables (the role of
+catalog statistics/samples in the paper), so Compact capacities are sound."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ir
+
+
+def eval_np(e: ir.Expr, t) -> np.ndarray:
+    if isinstance(e, ir.Col):
+        return t[e.name]
+    if isinstance(e, ir.Const):
+        return np.float32(e.value)
+    if isinstance(e, ir.BinOp):
+        a, b = eval_np(e.a, t), eval_np(e.b, t)
+        return {"+": a + b, "-": a - b, "*": a * b,
+                "/": a / np.where(b == 0, 1e-9, b)}[e.op]
+    if isinstance(e, ir.Cmp):
+        a, b = eval_np(e.a, t), eval_np(e.b, t)
+        return {"<": a < b, ">": a > b, "<=": a <= b, ">=": a >= b,
+                "==": a == b, "!=": a != b}[e.op]
+    if isinstance(e, ir.BoolOp):
+        vals = [eval_np(a, t).astype(bool) for a in e.args]
+        if e.op == "and":
+            out = vals[0]
+            for v in vals[1:]:
+                out = out & v
+            return out
+        if e.op == "or":
+            out = vals[0]
+            for v in vals[1:]:
+                out = out | v
+            return out
+        return ~vals[0]
+    if isinstance(e, ir.IsIn):
+        a = eval_np(e.a, t).astype(np.int64)
+        out = np.zeros_like(a, dtype=bool)
+        for v in e.values:
+            out |= a == v
+        return out
+    if isinstance(e, ir.IfExpr):
+        return np.where(eval_np(e.cond, t).astype(bool), eval_np(e.t, t), eval_np(e.f, t))
+    raise ValueError(f"np eval unsupported for {type(e)}")
+
+
+def has_call(e: ir.Expr) -> bool:
+    if isinstance(e, ir.Call):
+        return True
+    return any(has_call(c) for c in e.children())

@@ -1,0 +1,226 @@
+"""QueryEmbedder: bundles Model2Vec + Query2Vec + latency head with their
+training loops (contrastive Task-1 over WL pairs, latency Task-2), and the
+glue that turns them into the reusable MCTS's embed_fn / learned cost_fn.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import embedding as E
+from repro.core import ir, wl
+from repro.core.cost import CPU_PROFILE
+from repro.core.planner import analytic_cost_fn
+from repro.train.optim import AdamW
+
+
+@dataclasses.dataclass
+class QueryEmbedder:
+    m2v: Dict
+    q2v: Dict
+    latency_q2v: Dict          # separate copy for Task 2 (two-model strategy)
+    latency_head: Dict
+    one_model: bool = False    # Sec. V-E baseline: joint training
+
+    _cache: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+
+    # -- embedding ----------------------------------------------------------
+    def embed(self, plan: ir.Plan, catalog: ir.Catalog) -> np.ndarray:
+        key = ir.plan_signature(plan.root)
+        hit = self._cache.get(key)
+        if hit is not None:
+            return hit
+        pf = E.featurize_plan(plan, catalog)
+        emb = np.asarray(E.query2vec_apply(self.q2v, self.m2v,
+                                           E.pf_to_arrays(pf)))
+        self._cache[key] = emb
+        return emb
+
+    def embed_expr(self, graph) -> np.ndarray:
+        feats, mask = E.featurize_graph(graph)
+        return np.asarray(E.model2vec_apply(self.m2v, feats, mask))
+
+    # -- latency prediction ---------------------------------------------------
+    def predict_latency(self, plan: ir.Plan, catalog: ir.Catalog) -> float:
+        pf = E.featurize_plan(plan, catalog)
+        q2v = self.q2v if self.one_model else self.latency_q2v
+        emb = E.query2vec_apply(q2v, self.m2v, E.pf_to_arrays(pf))
+        log_lat = E.latency_apply(self.latency_head, emb)
+        return float(jnp.exp(log_lat))
+
+    def learned_cost_fn(self, catalog: ir.Catalog) -> Callable:
+        return lambda plan: self.predict_latency(plan, catalog)
+
+
+def init_embedder(seed: int = 0) -> QueryEmbedder:
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    return QueryEmbedder(m2v=E.init_model2vec(ks[0]),
+                         q2v=E.init_query2vec(ks[1]),
+                         latency_q2v=E.init_query2vec(ks[2]),
+                         latency_head=E.init_latency_head(ks[3]))
+
+
+# ===========================================================================
+# pair mining (WL kernel) + training
+# ===========================================================================
+
+def mine_triples(items: Sequence, feats: Sequence, n_triples: int,
+                 seed: int = 0) -> List[Tuple[int, int, int]]:
+    """(anchor, positive, negative) index triples by WL cosine similarity."""
+    rng = np.random.default_rng(seed)
+    n = len(items)
+    sims = np.zeros((n, n))
+    for i in range(n):
+        for j in range(i + 1, n):
+            s = wl.wl_similarity(feats[i], feats[j])
+            sims[i, j] = sims[j, i] = s
+    triples = []
+    for _ in range(n_triples):
+        a = int(rng.integers(0, n))
+        order = np.argsort(-sims[a])
+        order = order[order != a]
+        if len(order) < 2:
+            continue
+        pos = int(order[0])
+        neg = int(order[int(rng.integers(max(1, len(order) // 2), len(order)))])
+        triples.append((a, pos, neg))
+    return triples
+
+
+def train_model2vec(embedder: QueryEmbedder, graphs: Sequence,
+                    steps: int = 200, batch: int = 16, seed: int = 0,
+                    lr: float = 3e-4) -> Dict:
+    """Task-1 contrastive training for Model2Vec over sampled model graphs."""
+    feats = [wl.graph_wl(g) for g in graphs]
+    triples = mine_triples(graphs, feats, n_triples=max(steps * batch, 256),
+                           seed=seed)
+    enc = [E.featurize_graph(g) for g in graphs]
+    fa = jnp.stack([f for f, _ in enc])
+    ma = jnp.stack([m for _, m in enc])
+    opt = AdamW(lr=lr)
+    params = embedder.m2v
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, ai, pi, ni):
+        def loss(p):
+            ea = jax.vmap(lambda f, m: E.model2vec_apply(p, f, m))(fa[ai], ma[ai])
+            ep = jax.vmap(lambda f, m: E.model2vec_apply(p, f, m))(fa[pi], ma[pi])
+            en = jax.vmap(lambda f, m: E.model2vec_apply(p, f, m))(fa[ni], ma[ni])
+            return E.contrastive_loss(ea, ep, en)
+        l, g = jax.value_and_grad(loss)(params)
+        params, state = opt.update(g, state, params)
+        return params, state, l
+
+    rng = np.random.default_rng(seed)
+    hist = []
+    for i in range(steps):
+        idx = rng.integers(0, len(triples), batch)
+        a, p, n = zip(*[triples[j] for j in idx])
+        params, state, l = step(params, state, jnp.array(a), jnp.array(p),
+                                jnp.array(n))
+        hist.append(float(l))
+    embedder.m2v = params
+    return {"loss_first": hist[0], "loss_last": hist[-1]}
+
+
+def _plan_batch_arrays(plans_feats: List[E.PlanFeatures]):
+    return tuple(jnp.stack([getattr(pf, f.name) for pf in plans_feats])
+                 for f in dataclasses.fields(E.PlanFeatures))
+
+
+def train_query2vec(embedder: QueryEmbedder, plans, catalogs, steps: int = 200,
+                    batch: int = 12, seed: int = 0, lr: float = 3e-4) -> Dict:
+    """Task-1 contrastive training for Query2Vec over sampled queries."""
+    feats = [wl.plan_wl(p.root, p.registry) for p in plans]
+    triples = mine_triples(plans, feats, n_triples=max(steps * batch, 256),
+                           seed=seed)
+    pfs = [E.featurize_plan(p, c) for p, c in zip(plans, catalogs)]
+    arrays = _plan_batch_arrays(pfs)
+    opt = AdamW(lr=lr)
+    params = embedder.q2v
+    m2v = embedder.m2v
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, ai, pi, ni):
+        def emb(p, idx):
+            sel = tuple(a[idx] for a in arrays)
+            return jax.vmap(lambda *xs: E.query2vec_apply(p, m2v, xs))(*sel)
+
+        def loss(p):
+            return E.contrastive_loss(emb(p, ai), emb(p, pi), emb(p, ni))
+        l, g = jax.value_and_grad(loss)(params)
+        params, state = opt.update(g, state, params)
+        return params, state, l
+
+    rng = np.random.default_rng(seed)
+    hist = []
+    for i in range(steps):
+        idx = rng.integers(0, len(triples), batch)
+        a, p, n = zip(*[triples[j] for j in idx])
+        params, state, l = step(params, state, jnp.array(a), jnp.array(p),
+                                jnp.array(n))
+        hist.append(float(l))
+    embedder.q2v = params
+    embedder._cache.clear()
+    return {"loss_first": hist[0], "loss_last": hist[-1]}
+
+
+def train_latency(embedder: QueryEmbedder, plans, catalogs,
+                  latencies: Sequence[float], steps: int = 300,
+                  batch: int = 16, seed: int = 0, lr: float = 3e-4,
+                  one_model: bool = False) -> Dict:
+    """Task-2: latency head (4-layer FFNN, MSE on log latency).
+
+    Two-model strategy (default): a separate Query2Vec copy (initialized from
+    the contrastively-trained one) is fine-tuned jointly with the head.
+    One-model: the shared Query2Vec is trained jointly (Sec. V-E baseline).
+    """
+    pfs = [E.featurize_plan(p, c) for p, c in zip(plans, catalogs)]
+    arrays = _plan_batch_arrays(pfs)
+    y = jnp.log(jnp.asarray(latencies) + 1e-9)
+    if not one_model:
+        embedder.latency_q2v = jax.tree.map(jnp.copy, embedder.q2v)
+    q2v = embedder.q2v if one_model else embedder.latency_q2v
+    m2v = embedder.m2v
+    opt = AdamW(lr=lr)
+    params = {"q2v": q2v, "head": embedder.latency_head}
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, idx):
+        def loss(p):
+            sel = tuple(a[idx] for a in arrays)
+            emb = jax.vmap(lambda *xs: E.query2vec_apply(p["q2v"], m2v, xs))(*sel)
+            pred = E.latency_apply(p["head"], emb)
+            return E.latency_loss(pred, y[idx])
+        l, g = jax.value_and_grad(loss)(params)
+        params, state = opt.update(g, state, params)
+        return params, state, l
+
+    rng = np.random.default_rng(seed)
+    hist = []
+    for i in range(steps):
+        idx = jnp.asarray(rng.integers(0, len(plans), batch))
+        params, state, l = step(params, state, idx)
+        hist.append(float(l))
+    if one_model:
+        embedder.q2v = params["q2v"]
+        embedder.one_model = True
+    else:
+        embedder.latency_q2v = params["q2v"]
+    embedder.latency_head = params["head"]
+    embedder._cache.clear()
+    return {"loss_first": hist[0], "loss_last": hist[-1]}
+
+
+def q_error(pred: np.ndarray, actual: np.ndarray) -> np.ndarray:
+    pred = np.maximum(pred, 1e-12)
+    actual = np.maximum(actual, 1e-12)
+    return np.maximum(pred / actual, actual / pred)

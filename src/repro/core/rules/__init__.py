@@ -1,0 +1,9 @@
+"""Co-optimization rules O1-O4 (paper Sec. II-A + Appendix A).
+
+Every rule is result-preserving: ``tests/test_rules.py`` executes plan and
+rewrite on random catalogs and compares canonical outputs.
+"""
+from repro.core.rules.base import Rule, RuleConfig, ALL_RULES, rule_by_name
+from repro.core.rules import o1, o2, o3, o4  # noqa: F401  (registration side effects)
+
+__all__ = ["Rule", "RuleConfig", "ALL_RULES", "rule_by_name"]

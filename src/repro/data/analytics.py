@@ -1,0 +1,82 @@
+"""Synthetic Credit Card / Expedia / Flights analytics catalogs
+(paper Sec. V-C4; dimension/row counts reduced for the CPU container but
+keeping the workload structure: single scan / 3-way join / 4-way join,
+4-6 predicate filters, scalers, tree classifiers)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.ir import Catalog
+from repro.relational.table import Table
+
+
+def build_creditcard(scale: float = 1.0, seed: int = 2):
+    rng = np.random.default_rng(seed)
+    n = max(256, int(2890 * scale))  # paper: 289k rows, 29 features
+    cat = Catalog()
+    cat.add("creditcard", Table.from_columns({
+        "cc_id": jnp.arange(n, dtype=jnp.int32),
+        "amount": jnp.asarray(rng.random(n) * 1e3, jnp.float32),
+        "time": jnp.asarray(rng.random(n) * 24.0, jnp.float32),
+        "cc_f": jnp.asarray(rng.standard_normal((n, 29)), jnp.float32),
+    }))
+    return cat
+
+
+def build_expedia(scale: float = 1.0, seed: int = 3):
+    rng = np.random.default_rng(seed)
+    n_listing = max(128, int(790 * scale))  # paper: 79k rows, 3000 features
+    n_hotel = max(32, int(100 * scale))
+    n_search = max(32, int(120 * scale))
+    cat = Catalog()
+    cat.add("listings", Table.from_columns({
+        "l_id": jnp.arange(n_listing, dtype=jnp.int32),
+        "l_hotel_id": jnp.asarray(rng.integers(0, n_hotel, n_listing), jnp.int32),
+        "l_search_id": jnp.asarray(rng.integers(0, n_search, n_listing), jnp.int32),
+        "price": jnp.asarray(rng.random(n_listing) * 500, jnp.float32),
+        "listing_f": jnp.asarray(rng.standard_normal((n_listing, 96)), jnp.float32),
+    }))
+    cat.add("hotel", Table.from_columns({
+        "h_id": jnp.arange(n_hotel, dtype=jnp.int32),
+        "stars": jnp.asarray(rng.integers(1, 6, n_hotel), jnp.float32),
+        "hotel_f": jnp.asarray(rng.standard_normal((n_hotel, 80)), jnp.float32),
+    }))
+    cat.add("search", Table.from_columns({
+        "s_id": jnp.arange(n_search, dtype=jnp.int32),
+        "dest": jnp.asarray(rng.integers(0, 50, n_search), jnp.int32),
+        "search_f": jnp.asarray(rng.standard_normal((n_search, 80)), jnp.float32),
+    }))
+    return cat
+
+
+def build_flights(scale: float = 1.0, seed: int = 4):
+    rng = np.random.default_rng(seed)
+    n_routes = max(128, int(700 * scale))  # paper: 7k rows, 6000 features
+    n_airlines = max(16, int(60 * scale))
+    n_airports = max(32, int(120 * scale))
+    cat = Catalog()
+    cat.add("routes", Table.from_columns({
+        "rt_id": jnp.arange(n_routes, dtype=jnp.int32),
+        "rt_airline": jnp.asarray(rng.integers(0, n_airlines, n_routes), jnp.int32),
+        "rt_src": jnp.asarray(rng.integers(0, n_airports, n_routes), jnp.int32),
+        "rt_dst": jnp.asarray(rng.integers(0, n_airports, n_routes), jnp.int32),
+        "stops": jnp.asarray(rng.integers(0, 3, n_routes), jnp.float32),
+        "route_f": jnp.asarray(rng.standard_normal((n_routes, 128)), jnp.float32),
+    }))
+    cat.add("airlines", Table.from_columns({
+        "al_id": jnp.arange(n_airlines, dtype=jnp.int32),
+        "active": jnp.asarray(rng.integers(0, 2, n_airlines), jnp.int32),
+        "airline_f": jnp.asarray(rng.standard_normal((n_airlines, 64)), jnp.float32),
+    }))
+    cat.add("src_airports", Table.from_columns({
+        "sa_id": jnp.arange(n_airports, dtype=jnp.int32),
+        "sa_country": jnp.asarray(rng.integers(0, 40, n_airports), jnp.int32),
+        "sa_f": jnp.asarray(rng.standard_normal((n_airports, 64)), jnp.float32),
+    }))
+    cat.add("dst_airports", Table.from_columns({
+        "da_id": jnp.arange(n_airports, dtype=jnp.int32),
+        "da_country": jnp.asarray(rng.integers(0, 40, n_airports), jnp.int32),
+        "da_f": jnp.asarray(rng.standard_normal((n_airports, 64)), jnp.float32),
+    }))
+    return cat

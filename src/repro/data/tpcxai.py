@@ -1,0 +1,68 @@
+"""Synthetic TPCx-AI-shaped retailing catalog (order, store, customer,
+financial accounts/transactions, product, product_rating)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.ir import Catalog
+from repro.relational.table import Table
+
+
+def build(scale: float = 1.0, seed: int = 1):
+    rng = np.random.default_rng(seed)
+    n_store = max(8, int(12 * scale))
+    n_order = max(64, int(800 * scale))
+    n_cust = max(32, int(200 * scale))
+    n_txn = max(64, int(900 * scale))
+    n_prod = max(24, int(80 * scale))
+    n_rate = max(64, int(1200 * scale))
+
+    store = Table.from_columns({
+        "store": jnp.arange(n_store, dtype=jnp.int32),
+        "store_f": jnp.asarray(rng.standard_normal((n_store, 24)) * 0.5, jnp.float32),
+    })
+    order = Table.from_columns({
+        "o_order_id": jnp.arange(n_order, dtype=jnp.int32),
+        "o_store": jnp.asarray(rng.integers(0, n_store, n_order), jnp.int32),
+        "o_customer_sk": jnp.asarray(rng.integers(0, n_cust, n_order), jnp.int32),
+        "weekday": jnp.asarray(rng.integers(0, 7, n_order), jnp.int32),
+        "order_f": jnp.asarray(rng.standard_normal((n_order, 40)) * 0.5, jnp.float32),
+    })
+    customer = Table.from_columns({
+        "c_customer_sk": jnp.arange(n_cust, dtype=jnp.int32),
+        "c_cust_flag": jnp.asarray(rng.integers(0, 2, n_cust), jnp.int32),
+        "c_birth_year": jnp.asarray(rng.integers(1940, 2005, n_cust), jnp.float32),
+        "customer_f": jnp.asarray(rng.standard_normal((n_cust, 20)) * 0.5, jnp.float32),
+    })
+    account = Table.from_columns({
+        "fa_customer_sk": jnp.arange(n_cust, dtype=jnp.int32),
+        "transaction_limit": jnp.asarray(rng.random(n_cust) * 1e4, jnp.float32),
+    })
+    txn = Table.from_columns({
+        "transactionID": jnp.arange(n_txn, dtype=jnp.int32),
+        "senderID": jnp.asarray(rng.integers(0, n_cust, n_txn), jnp.int32),
+        "amount": jnp.asarray(rng.random(n_txn) * 5e3, jnp.float32),
+        "hour": jnp.asarray(rng.integers(0, 24, n_txn), jnp.float32),
+        "txn_f": jnp.asarray(rng.standard_normal((n_txn, 12)) * 0.5, jnp.float32),
+    })
+    product = Table.from_columns({
+        "p_product_id": jnp.arange(n_prod, dtype=jnp.int32),
+        "department": jnp.asarray(rng.integers(0, 10, n_prod), jnp.int32),
+        "product_f": jnp.asarray(rng.standard_normal((n_prod, 25)) * 0.5, jnp.float32),
+    })
+    rating = Table.from_columns({
+        "pr_user_id": jnp.asarray(rng.integers(0, n_cust, n_rate), jnp.int32),
+        "pr_product_id": jnp.asarray(rng.integers(0, n_prod, n_rate), jnp.int32),
+        "pr_rating": jnp.asarray(rng.integers(1, 6, n_rate), jnp.float32),
+    })
+
+    cat = Catalog()
+    cat.add("store", store)
+    cat.add("order", order)
+    cat.add("customer", customer)
+    cat.add("financial_account", account)
+    cat.add("financial_transactions", txn)
+    cat.add("product", product)
+    cat.add("product_rating", rating)
+    return cat

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the engine's compute hot spots.
+
+Each kernel package has:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (padding, backend/interpret selection)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+On this CPU container kernels run with interpret=True; on TPU they compile
+natively (block shapes are MXU-aligned multiples of 128).
+"""

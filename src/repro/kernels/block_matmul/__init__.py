@@ -1,0 +1,1 @@
+from repro.kernels.block_matmul import ops, ref  # noqa: F401

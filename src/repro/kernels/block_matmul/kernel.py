@@ -1,0 +1,53 @@
+"""Tiled matmul over a weight-tile relation — the R3-1 physical operator.
+
+The paper stores W as a relation of column tiles and scans one tile at a time
+through the buffer pool. On TPU the same blocking happens two levels down:
+the weight is sharded over the `model` mesh axis (one shard's tiles per chip)
+and this kernel streams (bk, bn) tiles HBM→VMEM, accumulating (bm, bn) output
+blocks in VMEM scratch. Grid: (M/bm, Ntiles=N/bn, K/bk).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _block_matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def block_matmul_pallas(x: jax.Array, w: jax.Array, *, bm: int = 128,
+                        bn: int = 128, bk: int = 512,
+                        interpret: bool = True) -> jax.Array:
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, "caller pads"
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_block_matmul_kernel, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,24 @@
+"""Public wrapper for the R3-1 block_matmul kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import common
+from repro.kernels.block_matmul.kernel import block_matmul_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("n_tiles",))
+def block_matmul(x: jax.Array, w: jax.Array, n_tiles: int = 8) -> jax.Array:
+    m, k = x.shape
+    n = w.shape[1]
+    bm = 128 if m >= 128 else 8
+    # tile width follows the relation's tile size, MXU-aligned
+    bn = max(128, ((n // max(n_tiles, 1)) // 128) * 128) if n >= 128 else 128
+    bk = 512 if k >= 512 else 128
+    xp = common.pad_to(common.pad_to(x, 0, bm), 1, bk)
+    wp = common.pad_to(common.pad_to(w, 0, bk), 1, bn)
+    out = block_matmul_pallas(xp, wp, bm=bm, bn=bn, bk=bk,
+                              interpret=common.use_interpret())
+    return out[:m, :n]

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle: tile-relational matmul == plain matmul."""
+import jax.numpy as jnp
+
+
+def block_matmul(x, w, n_tiles: int = 1):
+    del n_tiles  # tiling is a physical detail; semantics are x @ w
+    return (x.astype(jnp.float32) @ w.astype(jnp.float32)).astype(x.dtype)

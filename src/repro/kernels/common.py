@@ -1,0 +1,24 @@
+"""Shared kernel utilities."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def use_interpret() -> bool:
+    """Pallas interpret mode everywhere except a real TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+def pad_to(x: jax.Array, axis: int, multiple: int, value=0.0) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)

@@ -1,0 +1,1 @@
+from repro.kernels.decision_forest import ops, ref  # noqa: F401

@@ -1,0 +1,26 @@
+"""Public wrapper: converts node arrays to one-hot feature selectors (host
+side, once per model) and pads row blocks."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.decision_forest.kernel import forest_pallas
+
+
+@jax.jit
+def forest_predict(x: jax.Array, feat: jax.Array, thresh: jax.Array,
+                   leaf: jax.Array) -> jax.Array:
+    n, d = x.shape
+    n_trees, n_nodes = feat.shape
+    depth = (n_nodes + 1).bit_length() - 1
+    fonehot = jax.nn.one_hot(feat, d, axis=1, dtype=jnp.float32)  # [T, d, nodes]
+    bm = 128 if n >= 128 else 8
+    xp = common.pad_to(x.astype(jnp.float32), 0, bm)
+    out = forest_pallas(xp, fonehot, thresh.reshape(n_trees, 1, n_nodes),
+                        leaf.reshape(n_trees, 1, -1), depth, bm=bm,
+                        interpret=common.use_interpret())
+    return out[:n].astype(x.dtype)

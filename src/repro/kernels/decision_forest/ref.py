@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for forest inference (mean vote over complete trees)."""
+import jax.numpy as jnp
+
+
+def forest_predict(x, feat, thresh, leaf):
+    n, _ = x.shape
+    n_trees, n_nodes = feat.shape
+    depth = (n_nodes + 1).bit_length() - 1
+    node = jnp.zeros((n, n_trees), dtype=jnp.int32)
+    t_idx = jnp.arange(n_trees)[None, :]
+    for _ in range(depth):
+        f = feat[t_idx, node]
+        th = thresh[t_idx, node]
+        xv = jnp.take_along_axis(x, f, axis=1)
+        node = 2 * node + 1 + (xv > th).astype(jnp.int32)
+    leaf_idx = node - n_nodes
+    lv = leaf[t_idx, leaf_idx]
+    return jnp.mean(lv, axis=1)

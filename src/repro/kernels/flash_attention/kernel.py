@@ -1,0 +1,88 @@
+"""Flash attention (prefill) — tiled online-softmax attention.
+
+Grid: (B·H, Sq/bq, Skv/bkv), kv innermost. Scratch: f32 accumulator
+(bq, D) + running max/denominator (bq, 128 lanes, value broadcast) persist
+across the kv loop for a fixed q block; output is normalized and written on
+the final kv step. Causal masking uses global row/col indices; fully-masked
+blocks contribute exp(-inf)=0 (block-skip is a TPU scheduling refinement,
+see EXPERIMENTS §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, bq: int, bkv: int,
+                  kv_steps: int, kv_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)            # [bq, D]
+    k = k_ref[0].astype(jnp.float32)            # [bkv, D]
+    v = v_ref[0].astype(jnp.float32)            # [bkv, D]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    cols = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    mask = cols < kv_len  # key padding
+    if causal:
+        rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        mask = mask & (rows >= cols)
+    s = jnp.where(mask, s, _NEG)
+    m_prev = m_ref[:, :1]                       # [bq, 1]
+    l_prev = l_ref[:, :1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ki == kv_steps - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool, scale: float, kv_len: int,
+                           bq: int = 128, bkv: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    bh, sq, d = q.shape
+    _, skv, _ = k.shape
+    assert sq % bq == 0 and skv % bkv == 0, "caller pads"
+    grid = (bh, sq // bq, skv // bkv)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal, bq=bq,
+                          bkv=bkv, kv_steps=grid[2], kv_len=kv_len),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

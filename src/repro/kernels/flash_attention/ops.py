@@ -1,0 +1,32 @@
+"""Public wrapper for flash attention: [B, H, S, D] API, GQA via KV repeat
+at the head-group level, padding to block multiples."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True) -> jax.Array:
+    """q: [B, Hq, S, D]; k,v: [B, Hkv, S, D] with Hq % Hkv == 0."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    if hkv != hq:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    bq = 128 if s >= 128 else 8
+    bkv = 128 if s >= 128 else 8
+    qf = common.pad_to(q.reshape(b * hq, s, d), 1, bq)
+    kf = common.pad_to(k.reshape(b * hq, s, d), 1, bkv)
+    vf = common.pad_to(v.reshape(b * hq, s, d), 1, bkv)
+    out = flash_attention_pallas(qf, kf, vf, causal=causal, scale=d ** -0.5,
+                                 kv_len=s, bq=bq, bkv=bkv,
+                                 interpret=common.use_interpret())
+    return out[:, :s].reshape(b, hq, s, d)

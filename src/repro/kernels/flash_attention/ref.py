@@ -1,0 +1,17 @@
+"""Naive attention oracle."""
+import jax.numpy as jnp
+
+
+def attention(q, k, v, causal: bool = True, scale: float | None = None):
+    """q,k,v: [BH, S, D] (kv may have different S)."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        sq, sk = s.shape[1], s.shape[2]
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.flash_decode import ops, ref  # noqa: F401

@@ -1,0 +1,95 @@
+"""Flash decode — one-token attention over a (possibly sharded) KV block.
+
+This is the O3 insight (partition the big operand, compute per block,
+aggregate) applied to the KV cache: each `model`-axis shard holds an S-slice
+of the cache, runs this kernel over its local slice, and the partial
+(acc, m, l) triples are merged across shards with a log-sum-exp psum
+(models/attention.py). GQA handled natively: the q block is the G=Hq/Hkv
+query group attending to one kv head.
+
+Grid: (B·Hkv, S/bs). Scratch: f32 acc (G, D) + running m/l (G, 128).
+Outputs: unnormalized acc [BHkv, G, D], m and l broadcast on lanes
+[BHkv, G, 128].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, acc_out, m_out, l_out,
+                   acc_ref, m_ref, l_ref, *, scale: float, s_steps: int,
+                   bs: int, kv_len: int):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # [G, D]
+    k = k_ref[0].astype(jnp.float32)          # [bs, D]
+    v = v_ref[0].astype(jnp.float32)          # [bs, D]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    cols = si * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(cols < kv_len, s, _NEG)
+    m_prev = m_ref[:, :1]
+    l_prev = l_ref[:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(si == s_steps - 1)
+    def _finish():
+        acc_out[0] = acc_ref[...].astype(acc_out.dtype)
+        m_out[0] = m_ref[...].astype(m_out.dtype)
+        l_out[0] = l_ref[...].astype(l_out.dtype)
+
+
+def flash_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        scale: float, kv_len: int, bs: int = 512,
+                        interpret: bool = True):
+    """q: [BHkv, G, D]; k, v: [BHkv, S, D]. Returns (acc, m, l) partials."""
+    bh, g, d = q.shape
+    _, s, _ = k.shape
+    assert s % bs == 0, "caller pads"
+    grid = (bh, s // bs)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, s_steps=grid[1],
+                          bs=bs, kv_len=kv_len),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, bs, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, bs, d), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, g, d), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, g, 128), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, g, 128), lambda b, j: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((bh, g, 128), jnp.float32),
+            jax.ShapeDtypeStruct((bh, g, 128), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

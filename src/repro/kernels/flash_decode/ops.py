@@ -1,0 +1,33 @@
+"""Public wrapper for flash decode."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.flash_decode.kernel import flash_decode_pallas
+
+
+@jax.jit
+def decode_partials(q: jax.Array, k: jax.Array, v: jax.Array):
+    """q: [BH, G, D]; k,v: [BH, S, D]. Returns (acc [BH,G,D], m [BH,G],
+    l [BH,G]) — unnormalized partials for cross-shard lse merging."""
+    bh, g, d = q.shape
+    s = k.shape[1]
+    bs = 512 if s >= 512 else (128 if s >= 128 else 8)
+    kp = common.pad_to(k, 1, bs)
+    vp = common.pad_to(v, 1, bs)
+    gp = 8 if g < 8 else g
+    qp = common.pad_to(q, 1, gp) if g < 8 else q
+    acc, m, l = flash_decode_pallas(qp, kp, vp, scale=d ** -0.5, kv_len=s,
+                                    bs=bs, interpret=common.use_interpret())
+    return acc[:, :g], m[:, :g, 0], l[:, :g, 0]
+
+
+@jax.jit
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Single-shard convenience: normalized one-token attention."""
+    acc, m, l = decode_partials(q, k, v)
+    return acc / jnp.maximum(l, 1e-30)[..., None]

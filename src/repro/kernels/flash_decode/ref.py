@@ -1,0 +1,39 @@
+"""Oracle for flash decode: full-softmax one-token attention + the partial
+(acc, m, l) form used for cross-shard merging."""
+import jax.numpy as jnp
+
+
+def decode_attention(q, k, v, scale=None):
+    """q: [BH, G, D]; k,v: [BH, S, D] -> [BH, G, D]."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    s = jnp.einsum("bgd,bsd->bgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bgs,bsd->bgd", p, v.astype(jnp.float32))
+
+
+def decode_partials(q, k, v, scale=None):
+    """Reference (acc, m, l) partials over the full local block."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    s = jnp.einsum("bgd,bsd->bgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1, keepdims=True)
+    acc = jnp.einsum("bgs,bsd->bgd", p, v.astype(jnp.float32))
+    return acc, m[..., 0], l[..., 0]
+
+
+def merge_partials(accs, ms, ls):
+    """Merge per-shard partials (lists) into the exact softmax output."""
+    m_all = jnp.max(jnp.stack(ms), axis=0)
+    num = 0.0
+    den = 0.0
+    for acc, m, l in zip(accs, ms, ls):
+        w = jnp.exp(m - m_all)
+        num = num + acc * w[..., None]
+        den = den + l * w
+    return num / den[..., None]

@@ -1,0 +1,1 @@
+from repro.kernels.fused_dense import ops, ref  # noqa: F401

@@ -1,0 +1,26 @@
+"""Public jit'd wrapper for the fused_dense kernel (pads to block multiples)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.fused_dense.kernel import fused_dense_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("act",))
+def fused_dense(x: jax.Array, w: jax.Array, b: jax.Array,
+                act: str = "identity") -> jax.Array:
+    m, k = x.shape
+    n = w.shape[1]
+    bm = 128 if m >= 128 else 8
+    bn = 128 if n >= 128 else 128  # lane dim must be 128-aligned
+    bk = 512 if k >= 512 else 128
+    xp = common.pad_to(common.pad_to(x, 0, bm), 1, bk)
+    wp = common.pad_to(common.pad_to(w, 0, bk), 1, bn)
+    bp = common.pad_to(b, 0, bn)
+    out = fused_dense_pallas(xp, wp, bp, act, bm=bm, bn=bn, bk=bk,
+                             interpret=common.use_interpret())
+    return out[:m, :n]

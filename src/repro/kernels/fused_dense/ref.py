@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for fused_dense."""
+import jax
+import jax.numpy as jnp
+
+
+def fused_dense(x, w, b, act: str):
+    y = x.astype(jnp.float32) @ w.astype(jnp.float32) + b.astype(jnp.float32)
+    if act == "relu":
+        y = jax.nn.relu(y)
+    elif act == "sigmoid":
+        y = jax.nn.sigmoid(y)
+    elif act == "tanh":
+        y = jnp.tanh(y)
+    elif act == "gelu":
+        y = jax.nn.gelu(y)
+    elif act == "squared_relu":
+        y = jnp.square(jax.nn.relu(y))
+    elif act != "identity":
+        raise ValueError(act)
+    return y.astype(x.dtype)

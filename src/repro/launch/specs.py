@@ -1,0 +1,162 @@
+"""Cell builders for the dry-run: (arch x input-shape x mesh) -> abstract
+inputs (ShapeDtypeStructs with shardings, no allocation) + the step function.
+
+Shapes (assignment):
+  train_4k    — seq 4096,  global batch 256  (train_step)
+  prefill_32k — seq 32768, batch 32          (prefill -> logits + cache)
+  decode_32k  — cache 32768, batch 128       (decode_step, one token)
+  long_500k   — cache 524288, batch 1        (decode_step; sub-quadratic or
+                compressed-latent archs only; skips documented in dryrun)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import lm, sharding
+from repro.models.config import ModelConfig
+from repro.train.optim import AdamW, AdamWState
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+# microbatch counts chosen so activations fit 16GB HBM (see DESIGN.md)
+MICROBATCHES = {
+    "granite-moe-1b-a400m": 2, "deepseek-v2-236b": 32, "xlstm-1.3b": 4,
+    "nemotron-4-15b": 8, "stablelm-12b": 8, "granite-3-2b": 2,
+    "deepseek-67b": 16, "seamless-m4t-medium": 2, "zamba2-1.2b": 4,
+    "qwen2-vl-72b": 16,
+}
+
+
+def long_context_applicability(cfg: ModelConfig) -> Tuple[bool, str]:
+    if cfg.subquadratic:
+        return True, "sub-quadratic (SSM/hybrid) — constant or S-sharded state"
+    if cfg.attn == "mla":
+        return True, ("beyond-spec extra: MLA's compressed latent cache makes "
+                      "a 500k context practical")
+    return False, ("skipped: pure full-attention arch — a 500k dense-KV decode "
+                   "presupposes an infeasible 500k quadratic prefill "
+                   "(DESIGN.md Sec. 5 shape policy)")
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def _abs(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=_ns(mesh, spec))
+
+
+def abstract_model_state(cfg: ModelConfig, mesh, with_opt: bool, opt=None):
+    shapes = lm.abstract_params(cfg)
+    pspecs = sharding.param_pspecs(cfg, lm.param_shapes(cfg), mesh)
+    params = sharding.to_shape_dtype(shapes, mesh, pspecs)
+    if not with_opt:
+        return params, None, pspecs
+    opt = opt or AdamW()
+    opt_shapes = jax.eval_shape(opt.init, shapes)
+    opt_specs = AdamWState(step=P(), mu=pspecs, nu=pspecs)
+    opt_state = jax.tree.map(
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                          sharding=_ns(mesh, s)),
+        opt_shapes, opt_specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return params, opt_state, pspecs
+
+
+@dataclasses.dataclass
+class Cell:
+    fn: Callable
+    args: Tuple
+    static_descr: str
+    out_shardings: Any = None
+
+
+def build_cell(cfg: ModelConfig, shape_name: str, mesh,
+               microbatches: Optional[int] = None) -> Cell:
+    info = SHAPES[shape_name]
+    seq, batch = info["seq"], info["batch"]
+    bspec = sharding.batch_spec(mesh, batch)
+    b_ax = bspec[0] if len(bspec) else None
+
+    if info["kind"] == "train":
+        # bf16 optimizer moments for the 100B+ models (§Perf iteration C3)
+        moment_dtype = "bfloat16" if cfg.param_count() > 1e11 else "float32"
+        opt = AdamW(moment_dtype=moment_dtype)
+        params, opt_state, pspecs = abstract_model_state(
+            cfg, mesh, True, opt=opt)
+        mb = microbatches or MICROBATCHES.get(cfg.name, 4)
+        step = lm.make_train_step(cfg, opt, microbatches=mb, mesh=mesh)
+        batch_args: Dict[str, Any] = {
+            "tokens": _abs((batch, seq), jnp.int32, mesh, bspec),
+            "labels": _abs((batch, seq), jnp.int32, mesh, bspec),
+        }
+        if cfg.kind == "encdec":
+            batch_args["enc_embeds"] = _abs((batch, seq, cfg.d_model),
+                                            jnp.bfloat16, mesh,
+                                            P(b_ax, None, None))
+        if cfg.attn == "mrope":
+            batch_args["pos3"] = _abs((3, batch, seq), jnp.int32, mesh,
+                                      P(None, b_ax, None))
+        out_shardings = (
+            jax.tree.map(lambda s: _ns(mesh, s), pspecs),
+            AdamWState(step=_ns(mesh, P()),
+                       mu=jax.tree.map(lambda s: _ns(mesh, s), pspecs),
+                       nu=jax.tree.map(lambda s: _ns(mesh, s), pspecs)),
+            None,
+        )
+        return Cell(fn=step, args=(params, opt_state, batch_args),
+                    static_descr=f"train mb={mb}", out_shardings=out_shardings)
+
+    if info["kind"] == "prefill":
+        # serving is TP-only when the params fit one model-parallel group:
+        # no optimizer states, and dropping the data-axis FSDP sharding
+        # sidesteps GSPMD's involuntary full rematerialization on FSDP
+        # contractions (§Perf iteration A3'; refined in A5 — deepseek-v2's
+        # 236B params exceed TP-only HBM, so it keeps FSDP sharding)
+        if cfg.param_count() * 2 / mesh.shape["model"] < 10e9:
+            cfg = dataclasses.replace(cfg, fsdp=False)
+        params, _, pspecs = abstract_model_state(cfg, mesh, False)
+        tokens = _abs((batch, seq), jnp.int32, mesh, bspec)
+        extra = {}
+        if cfg.kind == "encdec":
+            extra["enc_embeds"] = _abs((batch, seq, cfg.d_model), jnp.bfloat16,
+                                       mesh, P(b_ax, None, None))
+        if cfg.attn == "mrope":
+            extra["pos3"] = _abs((3, batch, seq), jnp.int32, mesh,
+                                 P(None, b_ax, None))
+
+        names = list(extra.keys())
+
+        def step(params, tokens, *extras):
+            kw = dict(zip(names, extras))
+            return lm.prefill(params, cfg, tokens, max_len=seq, mesh=mesh, **kw)
+
+        return Cell(fn=step, args=(params, tokens) + tuple(extra.values()),
+                    static_descr="prefill")
+
+    # decode — keep the param sharding as-is (decode is bandwidth-bound on
+    # the cache regardless; TP-only params regressed HBM fit on the 60B+
+    # models — §Perf iteration A5)
+    params, _, pspecs = abstract_model_state(cfg, mesh, False)
+    cache_shapes = jax.eval_shape(
+        lambda: lm.init_cache(cfg, batch, seq,
+                              enc_len=min(seq, 4096) if cfg.kind == "encdec" else 0))
+    cspecs = sharding.cache_pspecs(cfg, cache_shapes, mesh, batch)
+    cache = {k: jax.ShapeDtypeStruct(v.shape, v.dtype,
+                                     sharding=_ns(mesh, cspecs[k]))
+             for k, v in cache_shapes.items()}
+    token = _abs((batch,), jnp.int32, mesh, P(b_ax))
+    step = lm.make_decode_step(cfg, mesh=mesh)
+    out_shardings = (None, {k: _ns(mesh, cspecs[k]) for k in cache})
+    return Cell(fn=step, args=(params, cache, token),
+                static_descr="decode", out_shardings=out_shardings)

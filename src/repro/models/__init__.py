@@ -1,0 +1,14 @@
+"""Model zoo for the 10 assigned architectures.
+
+config.py   — ModelConfig dataclass (family knobs: GQA/MLA/M-RoPE attention,
+              MoE, xLSTM, Mamba2-hybrid, enc-dec)
+layers.py   — norms, rotary (incl. M-RoPE), attention (chunked-flash jnp +
+              Pallas dispatch, shard_map S-sharded flash decode), MLP, MoE
+ssm.py      — shared chunked gated-linear-attention core (SSD duality),
+              Mamba2 block, mLSTM, sLSTM
+lm.py       — init / train_step loss / prefill / decode for every family
+sharding.py — PartitionSpec trees for the production mesh
+"""
+from repro.models.config import ModelConfig, MoEConfig, MLAConfig
+
+__all__ = ["ModelConfig", "MoEConfig", "MLAConfig"]

@@ -1,0 +1,295 @@
+"""Transformer layers: norms, rotary (incl. M-RoPE), attention, MLP, MoE.
+
+Attention paths:
+  * prefill: chunked flash attention in pure jnp (lax.scan over KV blocks,
+    online softmax) — compile-friendly, O(S·chunk) memory, identical FLOPs
+    to the Pallas flash_attention kernel which replaces it on real TPUs.
+  * decode: one-token attention over an S-sharded KV cache via shard_map —
+    per-shard partial softmax (the flash_decode kernel's math) merged with
+    log-sum-exp psum over the `model` axis. This is R3-1's
+    partition-compute-aggregate applied to the cache (DESIGN.md Sec. 5).
+
+MoE: GShard-style capacity dispatch built on sort (no [T,E,C] one-hot
+tensors), experts sharded over `model` (expert parallelism).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# norms + rotary
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, g, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * g
+
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: [B, S, H, hd]; positions: [B, S] int."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B,S,hd/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections=(16, 24, 24), theta: float = 1e6):
+    """Qwen2-VL multimodal rotary: the hd/2 frequency slots are partitioned
+    into (t, h, w) sections, each rotated by its own position id.
+    positions3: [3, B, S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    sec = jnp.concatenate([jnp.full((s,), i, jnp.int32)
+                           for i, s in enumerate(sections)])[: hd // 2]
+    pos = positions3[sec]                               # [hd/2, B, S] gather
+    pos = jnp.moveaxis(pos, 0, -1)                      # [B, S, hd/2]
+    ang = pos.astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention — prefill (chunked flash, pure jnp)
+# ---------------------------------------------------------------------------
+
+def jnp_flash_attention(q, k, v, *, causal: bool = True, chunk: int = 1024,
+                        scale: Optional[float] = None):
+    """q: [B,S,H,hd]; k,v: [B,S,Hkv,hd]. Online-softmax scan over KV chunks."""
+    b, s, h, hd = q.shape
+    skv = k.shape[1]
+    hkv = k.shape[2]
+    dv = v.shape[3]
+    group = h // hkv
+    scale = scale if scale is not None else hd ** -0.5
+    chunk = min(chunk, skv)
+    n_chunks = -(-skv // chunk)
+    pad = n_chunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, chunk, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, hkv, dv).transpose(1, 0, 2, 3, 4)
+    qg = q.reshape(b, s, hkv, group, hd)
+    rows = jnp.arange(s)
+
+    def step(carry, inp):
+        acc, m, l = carry
+        kb, vb, ci = inp
+        sc = jnp.einsum("bsngd,bcnd->bnsgc", qg.astype(jnp.float32),
+                        kb.astype(jnp.float32)) * scale  # [B,Hkv,S,G,C]
+        cols = ci * chunk + jnp.arange(chunk)
+        valid = cols[None, :] < skv
+        if causal:
+            valid = valid & (rows[:, None] >= cols[None, :])
+        sc = jnp.where(valid[None, None, :, None, :], sc, -1e30)
+        m_new = jnp.maximum(m, sc.max(-1))
+        p = jnp.exp(sc - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + p.sum(-1)
+        # (casting p to bf16 for the PV matmul was tried and REFUTED: the
+        # extra convert at a fusion boundary costs more traffic than the
+        # halved p saves — EXPERIMENTS §Perf iteration B2)
+        pv = jnp.einsum("bnsgc,bcnd->bnsgd", p, vb.astype(jnp.float32))
+        acc_new = acc * alpha[..., None] + pv
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, hkv, s, group, dv), jnp.float32)
+    m0 = jnp.full((b, hkv, s, group), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, s, group), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0),
+                                  (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 2, 1, 3, 4).reshape(b, s, h, dv)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention — decode over an S-sharded cache (shard_map + lse psum)
+# ---------------------------------------------------------------------------
+
+def _decode_partials_jnp(q, k, v, valid_len, scale):
+    """q: [B,H,hd]; k,v: [B,Sloc,Hkv,hd]; valid_len: scalar — how many local
+    slots are filled. Returns unnormalized (acc, m, l)."""
+    b, h, hd = q.shape
+    hkv = k.shape[2]
+    group = h // hkv
+    qg = q.reshape(b, hkv, group, hd)
+    s = jnp.einsum("bngd,bcnd->bngc", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    cols = jnp.arange(k.shape[1])
+    s = jnp.where(cols[None, None, None, :] < valid_len, s, -1e30)
+    m = s.max(-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(-1)
+    acc = jnp.einsum("bngc,bcnd->bngd", p, v.astype(jnp.float32))
+    return acc, m, l
+
+
+def sharded_decode_attention(q, k_cache, v_cache, cache_len, mesh,
+                             seq_axis: str = "model"):
+    """One-token attention with the cache's S axis sharded over `seq_axis`.
+
+    q: [B, H, hd] (replicated over seq_axis); k/v_cache: [B, S, Hkv, hd]
+    (S sharded). Each shard computes flash-decode partials on its local
+    slice; partials merge with a log-sum-exp psum — O(B·H·hd) collective
+    instead of all-gathering the cache.
+    """
+    hd = q.shape[-1]
+    scale = hd ** -0.5
+    s_total = k_cache.shape[1]
+    n_shards = mesh.shape[seq_axis]
+    s_loc = s_total // n_shards
+
+    def local(qb, kb, vb, clen):
+        idx = jax.lax.axis_index(seq_axis)
+        start = idx * s_loc
+        valid = jnp.clip(clen - start, 0, s_loc)
+        acc, m, l = _decode_partials_jnp(qb, kb, vb, valid, scale)
+        # lse merge across shards
+        m_all = jax.lax.pmax(m, seq_axis)
+        w = jnp.exp(m - m_all)
+        num = jax.lax.psum(acc * w[..., None], seq_axis)
+        den = jax.lax.psum(l * w, seq_axis)
+        return num / jnp.maximum(den, 1e-30)[..., None]
+
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names) or None
+    if batch_axes is not None:
+        ways = 1
+        for a in batch_axes:
+            ways *= mesh.shape[a]
+        if q.shape[0] % ways != 0:
+            batch_axes = None  # e.g. batch=1 long-context decode
+    spec_q = P(batch_axes, None, None)
+    spec_kv = P(batch_axes, seq_axis, None, None)
+    out = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(spec_q, spec_kv, spec_kv, P()),
+        out_specs=spec_q,
+    )(q, k_cache, v_cache, cache_len)
+    b, h = q.shape[0], q.shape[1]
+    return out.reshape(b, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP + MoE
+# ---------------------------------------------------------------------------
+
+def mlp(x, w_gate, w_in, w_out, act: str):
+    if act == "swiglu":
+        g = jax.nn.silu(x @ w_gate)
+        h = g * (x @ w_in)
+    elif act == "squared_relu":
+        h = jnp.square(jax.nn.relu(x @ w_in))
+    elif act == "gelu":
+        h = jax.nn.gelu(x @ w_in)
+    else:
+        raise ValueError(act)
+    return h @ w_out
+
+
+def _moe_dispatch_compute(x, router_w, e_gate, e_in, e_out, cfg: ModelConfig,
+                          e_lo: int, e_count: int, e_total: int):
+    """Core MoE: route, sort-dispatch to experts [e_lo, e_lo+e_count),
+    compute, weighted-combine. Pure (no collectives); the expert-parallel
+    wrapper runs it per model shard."""
+    mo = cfg.moe
+    t, d = x.shape
+    k = mo.top_k
+    if t <= 256:
+        cap = t  # dropless for decode/small batches (exactness matters there)
+    else:
+        cap = max(int(mo.capacity_factor * t * k / e_total) + 1, 4)
+    logits = (x @ router_w).astype(jnp.float32)          # [T, E_total]
+    gates = jax.nn.softmax(logits, axis=-1)
+    topv, tope = jax.lax.top_k(gates, k)                 # [T, k] global ids
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+    flat_e = tope.reshape(-1)
+    flat_w = topv.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+    # assignments outside this shard's expert range go to the drop bucket
+    local = (flat_e >= e_lo) & (flat_e < e_lo + e_count)
+    flat_e = jnp.where(local, flat_e - e_lo, e_count)
+    order = jnp.argsort(flat_e)                          # group by expert
+    se, sw, stok = flat_e[order], flat_w[order], flat_tok[order]
+    ones = jnp.ones_like(se)
+    pos_in_e = jax.lax.associative_scan(jnp.add, ones) - 1
+    seg_start = jnp.searchsorted(se, jnp.arange(e_count))
+    pos_in_e = pos_in_e - seg_start[jnp.minimum(se, e_count - 1)]
+    keep = (pos_in_e < cap) & (se < e_count)
+    slot = jnp.where(keep, se * cap + pos_in_e, e_count * cap)
+    buf = jnp.zeros((e_count * cap + 1, d), x.dtype).at[slot].set(
+        x[stok], mode="drop")
+    buf = buf[:-1].reshape(e_count, cap, d)
+    if cfg.act == "swiglu":
+        g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, e_gate))
+        h = g * jnp.einsum("ecd,edf->ecf", buf, e_in)
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, e_in))
+    y = jnp.einsum("ecf,efd->ecd", h, e_out).reshape(e_count * cap, d)
+    y = jnp.concatenate([y, jnp.zeros((1, d), y.dtype)], axis=0)
+    # combine in the activation dtype: keeps the [T, D] buffers and the
+    # cross-shard psum in bf16 (§Perf iteration B3)
+    out = jnp.zeros((t, d), x.dtype)
+    contrib = y[jnp.where(keep, slot, e_count * cap)] * sw[:, None].astype(y.dtype)
+    out = out.at[stok].add(contrib.astype(x.dtype), mode="drop")
+    return out
+
+
+def moe_block(x, router_w, e_gate, e_in, e_out, cfg: ModelConfig, mesh=None):
+    """x: [T, D]. Sort-based capacity dispatch (GShard-style).
+
+    mesh=None: single-device path (smoke tests).
+    mesh given: explicit expert parallelism via shard_map — tokens stay
+    batch-sharded (replicated over `model`), each model shard routes to its
+    local experts, and the combine is one psum of the [T_loc, D] output.
+    Without this, GSPMD lowers the combine scatter to replicated
+    [T·k, D] all-reduces — 6.1 TB/step on granite-moe (EXPERIMENTS §Perf
+    iteration B1)."""
+    mo = cfg.moe
+    e = mo.n_experts
+    if mesh is None or "model" not in mesh.axis_names \
+            or e % mesh.shape["model"] != 0:
+        return _moe_dispatch_compute(x, router_w, e_gate, e_in, e_out, cfg,
+                                     0, e, e)
+    n_shards = mesh.shape["model"]
+    e_loc = e // n_shards
+    t = x.shape[0]
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names) or None
+    if batch_axes is not None:
+        ways = 1
+        for a in batch_axes:
+            ways *= mesh.shape[a]
+        if t % ways != 0:
+            batch_axes = None
+
+    def body(xl, rw, eg, ei, eo):
+        idx = jax.lax.axis_index("model")
+        out = _moe_dispatch_compute(xl, rw, eg, ei, eo, cfg,
+                                    e_lo=idx * e_loc, e_count=e_loc,
+                                    e_total=e)
+        return jax.lax.psum(out, "model")
+
+    espec = P("model", None, None)
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(batch_axes, None), P(None, None), espec, espec,
+                  P("model", None, None)),
+        out_specs=P(batch_axes, None),
+    )(x, router_w, e_gate, e_in, e_out)

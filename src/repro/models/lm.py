@@ -1,0 +1,958 @@
+"""Model zoo core: parameter init, forward, loss, decode for all families.
+
+Layers are stacked on a leading L axis and scanned (jax.lax.scan) so HLO size
+is O(1) in depth; hybrid archs (zamba2 / xlstm) run segmented scans with the
+shared/periodic blocks interleaved as static python segments. Cross-entropy
+is computed in sequence chunks to bound the logits working set.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models.config import ModelConfig
+
+
+def _dt(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ===========================================================================
+# parameter initialization
+# ===========================================================================
+
+def _dense_block_shapes(cfg: ModelConfig, n_layers: int) -> Dict[str, Tuple]:
+    D, hd = cfg.d_model, cfg.hd
+    s: Dict[str, Tuple] = {
+        "ln1": (n_layers, D), "ln2": (n_layers, D),
+    }
+    if cfg.attn == "mla":
+        m = cfg.mla
+        qk = m.nope_dim + m.rope_dim
+        s.update({
+            "wq_a": (n_layers, D, m.q_lora), "q_ln": (n_layers, m.q_lora),
+            "wq_b": (n_layers, m.q_lora, cfg.n_heads * qk),
+            "wkv_a": (n_layers, D, m.kv_lora + m.rope_dim),
+            "kv_ln": (n_layers, m.kv_lora),
+            "wkv_b": (n_layers, m.kv_lora, cfg.n_heads * (m.nope_dim + m.v_dim)),
+            "wo": (n_layers, cfg.n_heads * m.v_dim, D),
+        })
+    else:
+        s.update({
+            "wq": (n_layers, D, cfg.n_heads * hd),
+            "wk": (n_layers, D, cfg.n_kv_heads * hd),
+            "wv": (n_layers, D, cfg.n_kv_heads * hd),
+            "wo": (n_layers, cfg.n_heads * hd, D),
+        })
+    if cfg.moe is not None:
+        mo = cfg.moe
+        s["router"] = (n_layers, D, mo.n_experts)
+        s["e_in"] = (n_layers, mo.n_experts, D, mo.d_expert)
+        s["e_out"] = (n_layers, mo.n_experts, mo.d_expert, D)
+        if cfg.act == "swiglu":
+            s["e_gate"] = (n_layers, mo.n_experts, D, mo.d_expert)
+        if mo.n_shared:
+            s["sh_in"] = (n_layers, D, mo.n_shared * mo.d_shared)
+            s["sh_out"] = (n_layers, mo.n_shared * mo.d_shared, D)
+            if cfg.act == "swiglu":
+                s["sh_gate"] = (n_layers, D, mo.n_shared * mo.d_shared)
+    else:
+        s["w_in"] = (n_layers, D, cfg.d_ff)
+        s["w_out"] = (n_layers, cfg.d_ff, D)
+        if cfg.act == "swiglu":
+            s["w_gate"] = (n_layers, D, cfg.d_ff)
+    return s
+
+
+def _mamba_shapes(cfg, n_layers):
+    D = cfg.d_model
+    d_in = cfg.ssm_expand * D
+    return {
+        "ln": (n_layers, D),
+        "w_in": (n_layers, D, d_in), "w_z": (n_layers, D, d_in),
+        "w_bc": (n_layers, D, 2 * cfg.ssm_state),
+        "w_dt": (n_layers, D, cfg.n_heads), "dt_bias": (n_layers, cfg.n_heads),
+        "conv_w": (n_layers, cfg.conv_width, d_in),
+        "A_log": (n_layers, cfg.n_heads), "D_skip": (n_layers, cfg.n_heads),
+        "w_out": (n_layers, d_in, D),
+    }
+
+
+def _mlstm_shapes(cfg, n_layers):
+    D = cfg.d_model
+    d_in = cfg.ssm_expand * D
+    return {
+        "ln": (n_layers, D),
+        "w_q": (n_layers, D, d_in), "w_k": (n_layers, D, d_in),
+        "w_v": (n_layers, D, d_in), "w_o": (n_layers, D, d_in),
+        "w_gates": (n_layers, D, 2 * cfg.n_heads),
+        "w_out": (n_layers, d_in, D),
+    }
+
+
+def _slstm_shapes(cfg, n_layers):
+    D = cfg.d_model
+    return {"ln": (n_layers, D), "w_gates": (n_layers, D, 4 * D),
+            "r_gates": (n_layers, D, 4 * D), "w_out": (n_layers, D, D)}
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Any]:
+    D, V = cfg.d_model, cfg.padded_vocab
+    tree: Dict[str, Any] = {"embed": (V, D), "final_norm": (D,)}
+    if cfg.kind in ("dense", "moe"):
+        tree["blocks"] = _dense_block_shapes(cfg, cfg.n_layers)
+    elif cfg.kind == "encdec":
+        tree["enc_blocks"] = _dense_block_shapes(cfg, cfg.enc_layers)
+        tree["blocks"] = _dense_block_shapes(cfg, cfg.n_layers)
+        cross = {
+            "ln_x": (cfg.n_layers, D),
+            "xq": (cfg.n_layers, D, cfg.n_heads * cfg.hd),
+            "xk": (cfg.n_layers, D, cfg.n_kv_heads * cfg.hd),
+            "xv": (cfg.n_layers, D, cfg.n_kv_heads * cfg.hd),
+            "xo": (cfg.n_layers, cfg.n_heads * cfg.hd, D),
+        }
+        tree["cross"] = cross
+        tree["enc_norm"] = (D,)
+    elif cfg.kind == "xlstm":
+        seg = cfg.slstm_every
+        n_seg = cfg.n_layers // seg
+        tree["mlstm"] = _mlstm_shapes(cfg, n_seg * (seg - 1))
+        tree["slstm"] = _slstm_shapes(cfg, n_seg)
+    elif cfg.kind == "hybrid":
+        tree["mamba"] = _mamba_shapes(cfg, cfg.n_layers)
+        # ONE shared attention+mlp block (zamba2)
+        tree["shared_attn"] = {
+            "ln1": (D,), "ln2": (D,),
+            "wq": (D, cfg.n_heads * cfg.hd), "wk": (D, cfg.n_kv_heads * cfg.hd),
+            "wv": (D, cfg.n_kv_heads * cfg.hd), "wo": (cfg.n_heads * cfg.hd, D),
+            "w_gate": (D, cfg.d_ff), "w_in": (D, cfg.d_ff), "w_out": (cfg.d_ff, D),
+        }
+    else:
+        raise ValueError(cfg.kind)
+    return tree
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    shapes = param_shapes(cfg)
+    dt = _dt(cfg)
+    flat, treedef = jax.tree.flatten(shapes, is_leaf=lambda x: isinstance(x, tuple))
+    keys = jax.random.split(key, len(flat))
+
+    def mk(shape, k):
+        if len(shape) == 1 or shape[-1] == shape[-2] == 0:
+            return jnp.ones(shape, dt)  # norms
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        return (jax.random.normal(k, shape, jnp.float32)
+                / np.sqrt(max(fan_in, 1))).astype(dt)
+
+    leaves = [mk(s, k) for s, k in zip(flat, keys)]
+    params = jax.tree.unflatten(treedef, leaves)
+    # norm-like vectors should be ones; biases zero
+    def fix(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("ln", "ln1", "ln2", "ln_x", "final_norm", "enc_norm",
+                    "q_ln", "kv_ln"):
+            return jnp.ones_like(x)
+        if name in ("dt_bias",):
+            return jnp.full_like(x, -2.0)
+        if name == "A_log":
+            return jnp.zeros_like(x)
+        if name == "D_skip":
+            return jnp.ones_like(x)
+        return x
+
+    return jax.tree_util.tree_map_with_path(fix, params)
+
+
+def abstract_params(cfg: ModelConfig, key=None):
+    """ShapeDtypeStructs only — used by the dry-run (no allocation)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ===========================================================================
+# forward — dense / moe / mla / mrope decoder blocks
+# ===========================================================================
+
+_FSDP_GATHER_SPECS = {
+    # unshard-at-use layouts: gathered over `data`, still `model`-sharded.
+    # Without these constraints GSPMD lowers the FSDP matmuls as
+    # partial-contraction + full-activation f32 all-reduces (15.5 GB/layer on
+    # qwen2-72b) instead of 54 MB/layer weight gathers — §Perf iteration A3.
+    "wq": ("model",), "wk": (None,), "wv": (None,), "wo": ("model", None),
+    "w_gate": ("model",), "w_in": ("model",), "w_out": ("model", None),
+    "wq_a": (None,), "wq_b": ("model",), "wkv_a": (None,),
+    "wkv_b": ("model",), "xq": ("model",), "xk": (None,), "xv": (None,),
+    "xo": ("model", None),
+}
+
+
+def _gather_fsdp(blk, cfg: ModelConfig, mesh):
+    """FSDP unshard-at-use: constrain weight slices to their gathered layout
+    right before the matmuls."""
+    if mesh is None or not cfg.fsdp:
+        return blk
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    out = dict(blk)
+    for name, tail in _FSDP_GATHER_SPECS.items():
+        w = out.get(name)
+        if w is None or w.ndim != 2:
+            continue
+        spec = (P(None, tail[0]) if len(tail) == 1 else P(*tail))
+        out[name] = jax.lax.with_sharding_constraint(
+            w, NamedSharding(mesh, spec))
+    return out
+
+
+def _attn_prefill(x, blk, cfg: ModelConfig, positions, pos3=None,
+                  kv_override=None, causal=True, with_kv=False):
+    b, s, d = x.shape
+    hd = cfg.hd
+    q = (x @ blk["wq"]).reshape(b, s, cfg.n_heads, hd)
+    src = x if kv_override is None else kv_override
+    k = (src @ blk["wk"]).reshape(b, -1, cfg.n_kv_heads, hd)
+    v = (src @ blk["wv"]).reshape(b, -1, cfg.n_kv_heads, hd)
+    if cfg.attn == "mrope":
+        q = L.apply_mrope(q, pos3, theta=cfg.rope_theta)
+        k = L.apply_mrope(k, pos3, theta=cfg.rope_theta)
+    elif kv_override is None:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    o = L.jnp_flash_attention(q, k, v, causal=causal)
+    out = o.reshape(b, s, cfg.n_heads * hd) @ blk["wo"]
+    if with_kv:
+        return out, (k, v)
+    return out
+
+
+def _mla_prefill(x, blk, cfg: ModelConfig, positions):
+    m = cfg.mla
+    b, s, d = x.shape
+    H = cfg.n_heads
+    qk = m.nope_dim + m.rope_dim
+    q = L.rms_norm(x @ blk["wq_a"], blk["q_ln"]) @ blk["wq_b"]
+    q = q.reshape(b, s, H, qk)
+    q_nope, q_pe = q[..., :m.nope_dim], q[..., m.nope_dim:]
+    kv = x @ blk["wkv_a"]
+    ckv = L.rms_norm(kv[..., :m.kv_lora], blk["kv_ln"])
+    k_pe = kv[..., m.kv_lora:].reshape(b, s, 1, m.rope_dim)
+    q_pe = L.apply_rope(q_pe, positions, cfg.rope_theta)
+    k_pe = L.apply_rope(k_pe, positions, cfg.rope_theta)
+    kvb = (ckv @ blk["wkv_b"]).reshape(b, s, H, m.nope_dim + m.v_dim)
+    k_nope, v = kvb[..., :m.nope_dim], kvb[..., m.nope_dim:]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe, (b, s, H, m.rope_dim))],
+                        axis=-1)
+    qq = jnp.concatenate([q_nope, q_pe], axis=-1)
+    o = L.jnp_flash_attention(qq, k, v, causal=True, scale=qk ** -0.5)
+    return o.reshape(b, s, H * m.v_dim) @ blk["wo"]
+
+
+def _ffn(x, blk, cfg: ModelConfig, mesh=None):
+    if cfg.moe is not None:
+        b, s, d = x.shape
+        flat = x.reshape(b * s, d)
+        y = L.moe_block(flat, blk["router"], blk.get("e_gate"), blk["e_in"],
+                        blk["e_out"], cfg, mesh=mesh)
+        if cfg.moe.n_shared:
+            y = y + L.mlp(flat, blk.get("sh_gate"), blk["sh_in"],
+                          blk["sh_out"], cfg.act)
+        return y.reshape(b, s, d)
+    return L.mlp(x, blk.get("w_gate"), blk["w_in"], blk["w_out"], cfg.act)
+
+
+def _decoder_block(x, blk, cfg: ModelConfig, positions, pos3, causal=True,
+                   mesh=None):
+    # (_gather_fsdp unshard-at-use was tried and REFUTED for train: forcing
+    # the gather layout doubled collective traffic via transposed reshards
+    # in backward — §Perf iteration A4; kept for reference, not applied)
+    h = L.rms_norm(x, blk["ln1"])
+    if cfg.attn == "mla":
+        a = _mla_prefill(h, blk, cfg, positions)
+    else:
+        a = _attn_prefill(h, blk, cfg, positions, pos3, causal=causal)
+    x = x + a
+    h = L.rms_norm(x, blk["ln2"])
+    return x + _ffn(h, blk, cfg, mesh)
+
+
+def _scan_blocks(x, blocks, cfg, positions, pos3, causal=True, cross=None,
+                 enc_h=None, mesh=None):
+    def body(carry, layer):
+        h = carry
+        if cross is None:
+            return _decoder_block(h, layer, cfg, positions, pos3,
+                                  causal=causal, mesh=mesh), None
+        blk, xblk = layer
+        # self-attn -> cross-attn -> FFN (matches prefill/decode order)
+        hh = L.rms_norm(h, blk["ln1"])
+        h = h + _attn_prefill(hh, blk, cfg, positions, pos3, causal=causal)
+        hh = L.rms_norm(h, xblk["ln_x"])
+        b, s, d = hh.shape
+        q = (hh @ xblk["xq"]).reshape(b, s, cfg.n_heads, cfg.hd)
+        k = (enc_h @ xblk["xk"]).reshape(b, -1, cfg.n_kv_heads, cfg.hd)
+        v = (enc_h @ xblk["xv"]).reshape(b, -1, cfg.n_kv_heads, cfg.hd)
+        o = L.jnp_flash_attention(q, k, v, causal=False)
+        h = h + o.reshape(b, s, cfg.n_heads * cfg.hd) @ xblk["xo"]
+        hh = L.rms_norm(h, blk["ln2"])
+        return h + _ffn(hh, blk, cfg, mesh), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    xs = blocks if cross is None else (blocks, cross)
+    x, _ = jax.lax.scan(fn, x, xs)
+    return x
+
+
+def forward(params, cfg: ModelConfig, tokens, positions=None, pos3=None,
+            enc_embeds=None, mesh=None):
+    """Returns final hidden states [B, S, D].
+
+    tokens: [B, S] int32 (decoder input). enc_embeds: [B, S_src, D] for
+    enc-dec (the modality frontend stub's output)."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    if cfg.attn == "mrope" and pos3 is None:
+        pos3 = jnp.broadcast_to(positions[None], (3, b, s))
+    x = params["embed"][tokens].astype(_dt(cfg))
+    if cfg.kind in ("dense", "moe"):
+        x = _scan_blocks(x, params["blocks"], cfg, positions, pos3, mesh=mesh)
+    elif cfg.kind == "encdec":
+        enc_pos = jnp.broadcast_to(jnp.arange(enc_embeds.shape[1])[None],
+                                   enc_embeds.shape[:2])
+        e = _scan_blocks(enc_embeds.astype(_dt(cfg)), params["enc_blocks"],
+                         cfg, enc_pos, None, causal=False)
+        e = L.rms_norm(e, params["enc_norm"])
+        x = _scan_blocks(x, params["blocks"], cfg, positions, None,
+                         causal=True, cross=params["cross"], enc_h=e,
+                         mesh=mesh)
+    elif cfg.kind == "xlstm":
+        x = _xlstm_forward(x, params, cfg)
+    elif cfg.kind == "hybrid":
+        x = _hybrid_forward(x, params, cfg, positions)
+    return L.rms_norm(x, params["final_norm"])
+
+
+def _xlstm_forward(x, params, cfg):
+    seg = cfg.slstm_every
+    n_seg = cfg.n_layers // seg
+    per = seg - 1
+    m = params["mlstm"]
+
+    def m_body(carry, layer):
+        h = carry
+        hh = L.rms_norm(h, layer["ln"])
+        out, _ = ssm.mlstm_forward(hh, layer, cfg)
+        return h + out, None
+
+    m_fn = jax.checkpoint(m_body) if cfg.remat else m_body
+    for si in range(n_seg):
+        seg_params = jax.tree.map(lambda a: a[si * per:(si + 1) * per], m)
+        x, _ = jax.lax.scan(m_fn, x, seg_params)
+        sl = jax.tree.map(lambda a: a[si], params["slstm"])
+        hh = L.rms_norm(x, sl["ln"])
+        out, _ = ssm.slstm_forward(hh, sl, cfg)
+        x = x + out
+    return x
+
+
+def _hybrid_forward(x, params, cfg, positions):
+    mp = params["mamba"]
+    sh = params["shared_attn"]
+
+    def m_body(carry, layer):
+        h = carry
+        hh = L.rms_norm(h, layer["ln"])
+        out, _ = ssm.mamba2_forward(hh, layer, cfg)
+        return h + out, None
+
+    m_fn = jax.checkpoint(m_body) if cfg.remat else m_body
+    every = cfg.attn_every
+    pos = 0
+    while pos < cfg.n_layers:
+        n = min(every, cfg.n_layers - pos)
+        seg_params = jax.tree.map(lambda a: a[pos:pos + n], mp)
+        x, _ = jax.lax.scan(m_fn, x, seg_params)
+        pos += n
+        if pos < cfg.n_layers or pos == cfg.n_layers:
+            # shared attention block after each segment (zamba2)
+            h = L.rms_norm(x, sh["ln1"])
+            a = _attn_prefill(h, sh, cfg, positions, None, causal=True)
+            x = x + a
+            h = L.rms_norm(x, sh["ln2"])
+            x = x + L.mlp(h, sh.get("w_gate"), sh["w_in"], sh["w_out"], "swiglu")
+    return x
+
+
+# ===========================================================================
+# loss (chunked CE) + train step
+# ===========================================================================
+
+def loss_fn(params, cfg: ModelConfig, batch, mesh=None) -> jax.Array:
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    h = forward(params, cfg, tokens, enc_embeds=batch.get("enc_embeds"),
+                pos3=batch.get("pos3"), mesh=mesh)
+    b, s, d = h.shape
+    emb = params["embed"]
+    chunk = min(cfg.loss_chunk, s)
+    nc = s // chunk if s % chunk == 0 else -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    hc = h.reshape(b, nc, chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    vocab_iota = jnp.arange(cfg.padded_vocab)
+
+    def ce(carry, inp):
+        hh, ll = inp
+        logits = (hh.astype(jnp.float32) @ emb.T.astype(jnp.float32))
+        logits = jnp.where(vocab_iota[None, None, :] < cfg.vocab, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(ll, 0)[..., None], axis=-1)[..., 0]
+        mask = (ll >= 0).astype(jnp.float32)
+        return (carry[0] + jnp.sum((lse - gold) * mask),
+                carry[1] + jnp.sum(mask)), None
+
+    fn = jax.checkpoint(ce) if cfg.remat else ce
+    (tot, cnt), _ = jax.lax.scan(fn, (0.0, 0.0), (hc, lc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def make_train_step(cfg: ModelConfig, optimizer, microbatches: int = 1,
+                    accum_dtype=jnp.float32, mesh=None):
+    """Train step with microbatched gradient accumulation (scan over
+    microbatches keeps activation memory at 1/M of the global batch —
+    required to fit the larger archs on 16GB v5e chips)."""
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, cfg, batch, mesh=mesh))(params)
+        else:
+            def split(k, x):
+                if k == "pos3":  # [3, B, S] — batch lives on axis 1
+                    r = x.reshape((3, microbatches, x.shape[1] // microbatches)
+                                  + x.shape[2:])
+                    return jnp.swapaxes(r, 0, 1)
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+
+            mbatch = {k: split(k, v) for k, v in batch.items()}
+
+            def acc_step(carry, mb):
+                loss_acc, g_acc = carry
+                l, g = jax.value_and_grad(
+                    lambda p: loss_fn(p, cfg, mb, mesh=mesh))(params)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), g_acc, g)
+                return (loss_acc + l, g_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            (loss, grads), _ = jax.lax.scan(acc_step, (0.0, g0), mbatch)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss}
+
+    return train_step
+
+
+# ===========================================================================
+# serving: cache init, prefill, decode
+# ===========================================================================
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_len: int = 0):
+    dt = _dt(cfg)
+    hd = cfg.hd
+    if cfg.kind in ("dense", "moe") and cfg.attn != "mla":
+        return {"k": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd), dt),
+                "v": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd), dt),
+                "len": jnp.zeros((), jnp.int32)}
+    if cfg.attn == "mla":
+        m = cfg.mla
+        return {"ckv": jnp.zeros((cfg.n_layers, batch, max_len, m.kv_lora), dt),
+                "kpe": jnp.zeros((cfg.n_layers, batch, max_len, m.rope_dim), dt),
+                "len": jnp.zeros((), jnp.int32)}
+    if cfg.kind == "xlstm":
+        seg = cfg.slstm_every
+        n_seg = cfg.n_layers // seg
+        per = seg - 1
+        d_in = cfg.ssm_expand * cfg.d_model
+        dh = d_in // cfg.n_heads
+        return {"mS": jnp.zeros((n_seg * per, batch, cfg.n_heads, dh, dh + 1),
+                                jnp.float32),
+                "sh": jnp.zeros((n_seg, batch, cfg.d_model), jnp.float32),
+                "sc": jnp.zeros((n_seg, batch, cfg.d_model), jnp.float32),
+                "sn": jnp.zeros((n_seg, batch, cfg.d_model), jnp.float32),
+                "len": jnp.zeros((), jnp.int32)}
+    if cfg.kind == "hybrid":
+        d_in = cfg.ssm_expand * cfg.d_model
+        dh = d_in // cfg.n_heads
+        n_attn = -(-cfg.n_layers // cfg.attn_every)
+        return {"conv": jnp.zeros((cfg.n_layers, batch, cfg.conv_width - 1, d_in), dt),
+                "ssm": jnp.zeros((cfg.n_layers, batch, cfg.n_heads,
+                                  cfg.ssm_state, dh), jnp.float32),
+                "k": jnp.zeros((n_attn, batch, max_len, cfg.n_kv_heads, hd), dt),
+                "v": jnp.zeros((n_attn, batch, max_len, cfg.n_kv_heads, hd), dt),
+                "len": jnp.zeros((), jnp.int32)}
+    if cfg.kind == "encdec":
+        return {"k": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd), dt),
+                "v": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd), dt),
+                "enc_h": jnp.zeros((batch, enc_len, cfg.d_model), dt),
+                "len": jnp.zeros((), jnp.int32)}
+    raise ValueError(cfg.kind)
+
+
+def _decode_attn(q, k_cache, v_cache, cache_len, mesh):
+    """q: [B,H,hd]; caches [B,S,kv,hd]."""
+    if mesh is not None:
+        return L.sharded_decode_attention(q, k_cache, v_cache, cache_len, mesh)
+    hd = q.shape[-1]
+    b, h = q.shape[0], q.shape[1]
+    hkv = k_cache.shape[2]
+    qg = q.reshape(b, hkv, h // hkv, hd)
+    kk = k_cache.swapaxes(1, 2)  # [B,kv,S,hd]
+    vv = v_cache.swapaxes(1, 2)
+    sc = jnp.einsum("bngd,bnsd->bngs", qg.astype(jnp.float32),
+                    kk.astype(jnp.float32)) * hd ** -0.5
+    cols = jnp.arange(k_cache.shape[1])
+    sc = jnp.where(cols[None, None, None, :] < cache_len, sc, -1e30)
+    w = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bngs,bnsd->bngd", w, vv.astype(jnp.float32))
+    return o.reshape(b, h, hd).astype(q.dtype)
+
+
+def make_decode_step(cfg: ModelConfig, mesh=None):
+    """Returns decode_step(params, cache, token [B]) -> (logits [B,V], cache)."""
+
+    def gqa_layer(x, blk, k_cache, v_cache, clen, positions):
+        b = x.shape[0]
+        hd = cfg.hd
+        h = L.rms_norm(x, blk["ln1"])
+        q = (h @ blk["wq"]).reshape(b, 1, cfg.n_heads, hd)
+        k = (h @ blk["wk"]).reshape(b, 1, cfg.n_kv_heads, hd)
+        v = (h @ blk["wv"]).reshape(b, 1, cfg.n_kv_heads, hd)
+        if cfg.attn == "mrope":
+            pos3 = jnp.broadcast_to(positions[None], (3, b, 1))
+            q = L.apply_mrope(q, pos3, theta=cfg.rope_theta)
+            k = L.apply_mrope(k, pos3, theta=cfg.rope_theta)
+        else:
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, clen, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, clen, axis=1)
+        o = _decode_attn(q[:, 0], k_cache, v_cache, clen + 1, mesh)
+        x = x + o.reshape(b, cfg.n_heads * hd) @ blk["wo"]
+        h = L.rms_norm(x, blk["ln2"])
+        return x + _ffn(h[:, None, :], blk, cfg, mesh)[:, 0], k_cache, v_cache
+
+    def decode_step(params, cache, token, enc_h=None):
+        b = token.shape[0]
+        clen = cache["len"]
+        positions = jnp.broadcast_to(clen[None, None], (b, 1))
+        x = params["embed"][token].astype(_dt(cfg))          # [B, D]
+        if cfg.kind in ("dense", "moe") and cfg.attn != "mla":
+            def body(carry, layer):
+                h, i = carry
+                blk, kc, vc = layer
+                h2, kc2, vc2 = gqa_layer(h, blk, kc, vc, clen, positions)
+                return (h2, i + 1), (kc2, vc2)
+
+            (x, _), (ks, vs) = jax.lax.scan(
+                body, (x, 0), (params["blocks"], cache["k"], cache["v"]))
+            cache = dict(cache, k=ks, v=vs, len=clen + 1)
+        elif cfg.attn == "mla":
+            x, cache = _mla_decode(params, cfg, cache, x, positions, mesh)
+        elif cfg.kind == "xlstm":
+            x, cache = _xlstm_decode(params, cfg, cache, x)
+        elif cfg.kind == "hybrid":
+            x, cache = _hybrid_decode(params, cfg, cache, x, positions, mesh)
+        elif cfg.kind == "encdec":
+            x, cache = _encdec_decode(params, cfg, cache, x, positions,
+                                      enc_h if enc_h is not None else cache["enc_h"])
+        x = L.rms_norm(x, params["final_norm"])
+        logits = x.astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+        logits = jnp.where(jnp.arange(cfg.padded_vocab)[None, :] < cfg.vocab,
+                           logits, -1e30)
+        return logits, cache
+
+    return decode_step
+
+
+def _mla_decode(params, cfg, cache, x, positions, mesh):
+    m = cfg.mla
+    H = cfg.n_heads
+    b = x.shape[0]
+    clen = cache["len"]
+
+    def body(carry, layer):
+        h = carry
+        blk, ckv_c, kpe_c = layer
+        hh = L.rms_norm(h, blk["ln1"])
+        q = L.rms_norm(hh @ blk["wq_a"], blk["q_ln"]) @ blk["wq_b"]
+        q = q.reshape(b, H, m.nope_dim + m.rope_dim)
+        q_nope, q_pe = q[..., :m.nope_dim], q[..., m.nope_dim:]
+        q_pe = L.apply_rope(q_pe[:, None], positions, cfg.rope_theta)[:, 0]
+        kv = hh @ blk["wkv_a"]
+        ckv = L.rms_norm(kv[..., :m.kv_lora], blk["kv_ln"])
+        kpe = L.apply_rope(kv[..., m.kv_lora:][:, None, None, :], positions,
+                           cfg.rope_theta)[:, 0, 0]
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(ckv_c, ckv[:, None], clen, 1)
+        kpe_c = jax.lax.dynamic_update_slice_in_dim(kpe_c, kpe[:, None], clen, 1)
+        # absorbed attention: q_c = q_nope @ W_uk  -> latent space
+        wkv_b = blk["wkv_b"].reshape(m.kv_lora, H, m.nope_dim + m.v_dim)
+        w_uk = wkv_b[..., :m.nope_dim]                    # [kvlora, H, nope]
+        w_uv = wkv_b[..., m.nope_dim:]                    # [kvlora, H, v]
+        q_c = jnp.einsum("bhn,khn->bhk", q_nope.astype(jnp.float32),
+                         w_uk.astype(jnp.float32))        # [B,H,kvlora]
+        scale = (m.nope_dim + m.rope_dim) ** -0.5
+        ctx = _mla_latent_attention(q_c, q_pe, ckv_c, kpe_c, clen + 1, scale,
+                                    mesh)                  # [B,H,kvlora]
+        o = jnp.einsum("bhk,khv->bhv", ctx, w_uv.astype(jnp.float32))
+        o = o.reshape(b, H * m.v_dim).astype(h.dtype)
+        h = h + o @ blk["wo"]
+        hh = L.rms_norm(h, blk["ln2"])
+        h = h + _ffn(hh[:, None, :], blk, cfg, mesh)[:, 0]
+        return h, (ckv_c, kpe_c)
+
+    x, (ckvs, kpes) = jax.lax.scan(body, x, (params["blocks"], cache["ckv"],
+                                             cache["kpe"]))
+    return x, dict(cache, ckv=ckvs, kpe=kpes, len=cache["len"] + 1)
+
+
+def _mla_latent_attention(q_c, q_pe, ckv_c, kpe_c, valid_len, scale, mesh):
+    """Scores over the latent cache; S axis optionally sharded over model."""
+
+    def local(qc, qp, ck, kp, vl, offset):
+        sc = (jnp.einsum("bhk,bsk->bhs", qc, ck.astype(jnp.float32))
+              + jnp.einsum("bhr,bsr->bhs", qp.astype(jnp.float32),
+                           kp.astype(jnp.float32))) * scale
+        cols = jnp.arange(ck.shape[1]) + offset
+        sc = jnp.where(cols[None, None, :] < vl, sc, -1e30)
+        m = sc.max(-1)
+        p = jnp.exp(sc - m[..., None])
+        l = p.sum(-1)
+        acc = jnp.einsum("bhs,bsk->bhk", p, ck.astype(jnp.float32))
+        return acc, m, l
+
+    if mesh is None:
+        acc, m, l = local(q_c, q_pe, ckv_c, kpe_c, valid_len, 0)
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    from jax.sharding import PartitionSpec as P
+    n_shards = mesh.shape["model"]
+    s_loc = ckv_c.shape[1] // n_shards
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names) or None
+    if batch_axes is not None:
+        ways = 1
+        for a in batch_axes:
+            ways *= mesh.shape[a]
+        if q_c.shape[0] % ways != 0:
+            batch_axes = None  # e.g. batch=1 long-context decode
+
+    def shard_fn(qc, qp, ck, kp, vl):
+        idx = jax.lax.axis_index("model")
+        acc, m, l = local(qc, qp, ck, kp, vl, idx * s_loc)
+        m_all = jax.lax.pmax(m, "model")
+        w = jnp.exp(m - m_all)
+        num = jax.lax.psum(acc * w[..., None], "model")
+        den = jax.lax.psum(l * w, "model")
+        return num / jnp.maximum(den, 1e-30)[..., None]
+
+    return jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(batch_axes, None, None), P(batch_axes, None, None),
+                  P(batch_axes, "model", None), P(batch_axes, "model", None),
+                  P()),
+        out_specs=P(batch_axes, None, None),
+    )(q_c, q_pe, ckv_c, kpe_c, valid_len)
+
+
+def _xlstm_decode(params, cfg, cache, x):
+    seg = cfg.slstm_every
+    n_seg = cfg.n_layers // seg
+    per = seg - 1
+
+    def m_body(carry, layer):
+        h = carry
+        blk, S = layer
+        hh = L.rms_norm(h, blk["ln"])
+        out, (S2,) = ssm.mlstm_forward(hh[:, None], blk, cfg, state=(S,),
+                                       decode=True)
+        return h + out[:, 0], S2
+
+    x_cur = x
+    mS = cache["mS"]
+    new_mS = []
+    for si in range(n_seg):
+        seg_p = jax.tree.map(lambda a: a[si * per:(si + 1) * per], params["mlstm"])
+        seg_S = mS[si * per:(si + 1) * per]
+        x_cur, S_out = jax.lax.scan(m_body, x_cur, (seg_p, seg_S))
+        new_mS.append(S_out)
+        sl = jax.tree.map(lambda a: a[si], params["slstm"])
+        hh = L.rms_norm(x_cur, sl["ln"])
+        st = (cache["sh"][si], cache["sc"][si], cache["sn"][si])
+        out, (h2, c2, n2) = ssm.slstm_forward(hh[:, None], sl, cfg, state=st,
+                                              decode=True)
+        x_cur = x_cur + out[:, 0]
+        cache = dict(cache, sh=cache["sh"].at[si].set(h2),
+                     sc=cache["sc"].at[si].set(c2),
+                     sn=cache["sn"].at[si].set(n2))
+    cache = dict(cache, mS=jnp.concatenate(new_mS, 0), len=cache["len"] + 1)
+    return x_cur, cache
+
+
+def _hybrid_decode(params, cfg, cache, x, positions, mesh):
+    clen = cache["len"]
+    every = cfg.attn_every
+    sh = params["shared_attn"]
+    hd = cfg.hd
+    b = x.shape[0]
+
+    def m_body(carry, layer):
+        h = carry
+        blk, conv_s, ssm_s = layer
+        hh = L.rms_norm(h, blk["ln"])
+        out, (c2, s2) = ssm.mamba2_forward(hh[:, None], blk, cfg,
+                                           state=(conv_s, ssm_s), decode=True)
+        return h + out[:, 0], (c2, s2)
+
+    pos = 0
+    ai = 0
+    new_conv, new_ssm, new_k, new_v = [], [], [], []
+    while pos < cfg.n_layers:
+        n = min(every, cfg.n_layers - pos)
+        seg_p = jax.tree.map(lambda a: a[pos:pos + n], params["mamba"])
+        seg_c = cache["conv"][pos:pos + n]
+        seg_s = cache["ssm"][pos:pos + n]
+        x, (c_out, s_out) = jax.lax.scan(m_body, x, (seg_p, seg_c, seg_s))
+        new_conv.append(c_out)
+        new_ssm.append(s_out)
+        pos += n
+        # shared attention after each segment
+        h = L.rms_norm(x, sh["ln1"])
+        q = (h @ sh["wq"]).reshape(b, 1, cfg.n_heads, hd)
+        k = (h @ sh["wk"]).reshape(b, 1, cfg.n_kv_heads, hd)
+        v = (h @ sh["wv"]).reshape(b, 1, cfg.n_kv_heads, hd)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"][ai], k, clen, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"][ai], v, clen, 1)
+        new_k.append(kc[None])
+        new_v.append(vc[None])
+        o = _decode_attn(q[:, 0], kc, vc, clen + 1, mesh)
+        x = x + o.reshape(b, cfg.n_heads * hd) @ sh["wo"]
+        h = L.rms_norm(x, sh["ln2"])
+        x = x + L.mlp(h, sh.get("w_gate"), sh["w_in"], sh["w_out"], "swiglu")
+        ai += 1
+    cache = dict(cache, conv=jnp.concatenate(new_conv, 0),
+                 ssm=jnp.concatenate(new_ssm, 0),
+                 k=jnp.concatenate(new_k, 0), v=jnp.concatenate(new_v, 0),
+                 len=clen + 1)
+    return x, cache
+
+
+def _encdec_decode(params, cfg, cache, x, positions, enc_h):
+    clen = cache["len"]
+    b = x.shape[0]
+    hd = cfg.hd
+
+    def body(carry, layer):
+        h = carry
+        (blk, xblk), kc, vc = layer
+        hh = L.rms_norm(h, blk["ln1"])
+        q = (hh @ blk["wq"]).reshape(b, 1, cfg.n_heads, hd)
+        k = (hh @ blk["wk"]).reshape(b, 1, cfg.n_kv_heads, hd)
+        v = (hh @ blk["wv"]).reshape(b, 1, cfg.n_kv_heads, hd)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, clen, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, clen, 1)
+        o = _decode_attn(q[:, 0], kc, vc, clen + 1, None)
+        h = h + o.reshape(b, cfg.n_heads * hd) @ blk["wo"]
+        # cross attention over encoder states
+        hh = L.rms_norm(h, xblk["ln_x"])
+        q = (hh @ xblk["xq"]).reshape(b, cfg.n_heads, hd)
+        ke = (enc_h @ xblk["xk"]).reshape(b, -1, cfg.n_kv_heads, hd)
+        ve = (enc_h @ xblk["xv"]).reshape(b, -1, cfg.n_kv_heads, hd)
+        o = _decode_attn(q, ke, ve, jnp.asarray(ke.shape[1]), None)
+        h = h + o.reshape(b, cfg.n_heads * hd) @ xblk["xo"]
+        hh = L.rms_norm(h, blk["ln2"])
+        h = h + _ffn(hh[:, None, :], blk, cfg)[:, 0]
+        return h, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(body, x, ((params["blocks"], params["cross"]),
+                                         cache["k"], cache["v"]))
+    return x, dict(cache, k=ks, v=vs, len=clen + 1)
+
+
+def encode(params, cfg: ModelConfig, enc_embeds):
+    """Encoder pass for enc-dec serving (frontend stub output -> memory)."""
+    enc_pos = jnp.broadcast_to(jnp.arange(enc_embeds.shape[1])[None],
+                               enc_embeds.shape[:2])
+    e = _scan_blocks(enc_embeds.astype(_dt(cfg)), params["enc_blocks"], cfg,
+                     enc_pos, None, causal=False)
+    return L.rms_norm(e, params["enc_norm"])
+
+
+# ===========================================================================
+# prefill: process a prompt, return (last-token logits, populated cache)
+# ===========================================================================
+
+def prefill(params, cfg: ModelConfig, tokens, max_len: int, enc_embeds=None,
+            pos3=None, mesh=None):
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    if cfg.attn == "mrope" and pos3 is None:
+        pos3 = jnp.broadcast_to(positions[None], (3, b, s))
+    x = params["embed"][tokens].astype(_dt(cfg))
+    pad_s = max_len - s
+
+    def pad_cache_seq(a):  # [L?, B, S, ...] -> padded to max_len on axis -3/1
+        widths = [(0, 0)] * a.ndim
+        widths[-3 if a.ndim >= 4 else 1] = (0, pad_s)
+        return jnp.pad(a, widths)
+
+    if cfg.kind in ("dense", "moe") and cfg.attn != "mla":
+        def body(h, blk):
+            hh = L.rms_norm(h, blk["ln1"])
+            a, kv = _attn_prefill(hh, blk, cfg, positions, pos3, with_kv=True)
+            h = h + a
+            hh = L.rms_norm(h, blk["ln2"])
+            return h + _ffn(hh, blk, cfg, mesh), kv
+
+        fn = jax.checkpoint(body, static_argnums=()) if cfg.remat else body
+        x, (ks, vs) = jax.lax.scan(fn, x, params["blocks"])
+        cache = {"k": jnp.pad(ks, ((0, 0), (0, 0), (0, pad_s), (0, 0), (0, 0))),
+                 "v": jnp.pad(vs, ((0, 0), (0, 0), (0, pad_s), (0, 0), (0, 0))),
+                 "len": jnp.asarray(s, jnp.int32)}
+    elif cfg.attn == "mla":
+        m = cfg.mla
+
+        def body(h, blk):
+            hh = L.rms_norm(h, blk["ln1"])
+            kv = hh @ blk["wkv_a"]
+            ckv = L.rms_norm(kv[..., :m.kv_lora], blk["kv_ln"])
+            kpe_r = L.apply_rope(kv[..., m.kv_lora:][:, :, None, :], positions,
+                                 cfg.rope_theta)[:, :, 0]
+            a = _mla_prefill(hh, blk, cfg, positions)
+            h = h + a
+            hh = L.rms_norm(h, blk["ln2"])
+            return h + _ffn(hh, blk, cfg, mesh), (ckv, kpe_r)
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        x, (ckvs, kpes) = jax.lax.scan(fn, x, params["blocks"])
+        cache = {"ckv": jnp.pad(ckvs, ((0, 0), (0, 0), (0, pad_s), (0, 0))),
+                 "kpe": jnp.pad(kpes, ((0, 0), (0, 0), (0, pad_s), (0, 0))),
+                 "len": jnp.asarray(s, jnp.int32)}
+    elif cfg.kind == "xlstm":
+        x, cache = _xlstm_prefill(x, params, cfg)
+    elif cfg.kind == "hybrid":
+        x, cache = _hybrid_prefill(x, params, cfg, positions, max_len, pad_s)
+    elif cfg.kind == "encdec":
+        enc_h = encode(params, cfg, enc_embeds)
+
+        def body(h, layer):
+            blk, xblk = layer
+            hh = L.rms_norm(h, blk["ln1"])
+            a, kv = _attn_prefill(hh, blk, cfg, positions, None, with_kv=True)
+            h = h + a
+            hh = L.rms_norm(h, xblk["ln_x"])
+            bq = (hh @ xblk["xq"]).reshape(b, s, cfg.n_heads, cfg.hd)
+            ke = (enc_h @ xblk["xk"]).reshape(b, -1, cfg.n_kv_heads, cfg.hd)
+            ve = (enc_h @ xblk["xv"]).reshape(b, -1, cfg.n_kv_heads, cfg.hd)
+            o = L.jnp_flash_attention(bq, ke, ve, causal=False)
+            h = h + o.reshape(b, s, cfg.n_heads * cfg.hd) @ xblk["xo"]
+            hh = L.rms_norm(h, blk["ln2"])
+            return h + _ffn(hh, blk, cfg), kv
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        x, (ks, vs) = jax.lax.scan(fn, x, (params["blocks"], params["cross"]))
+        cache = {"k": jnp.pad(ks, ((0, 0), (0, 0), (0, pad_s), (0, 0), (0, 0))),
+                 "v": jnp.pad(vs, ((0, 0), (0, 0), (0, pad_s), (0, 0), (0, 0))),
+                 "enc_h": enc_h, "len": jnp.asarray(s, jnp.int32)}
+    else:
+        raise ValueError(cfg.kind)
+    x = L.rms_norm(x[:, -1], params["final_norm"])
+    logits = x.astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+    return logits, cache
+
+
+def _xlstm_prefill(x, params, cfg):
+    seg = cfg.slstm_every
+    n_seg = cfg.n_layers // seg
+    per = seg - 1
+    b = x.shape[0]
+    d_in = cfg.ssm_expand * cfg.d_model
+    dh = d_in // cfg.n_heads
+
+    def m_body(h, layer):
+        hh = L.rms_norm(h, layer["ln"])
+        out, (S,) = ssm.mlstm_forward(hh, layer, cfg)
+        return h + out, S
+
+    mS_all, sh_all, sc_all, sn_all = [], [], [], []
+    for si in range(n_seg):
+        seg_p = jax.tree.map(lambda a: a[si * per:(si + 1) * per],
+                             params["mlstm"])
+        x, S_seg = jax.lax.scan(m_body, x, seg_p)
+        mS_all.append(S_seg)
+        sl = jax.tree.map(lambda a: a[si], params["slstm"])
+        hh = L.rms_norm(x, sl["ln"])
+        out, (h2, c2, n2) = ssm.slstm_forward(hh, sl, cfg)
+        x = x + out
+        sh_all.append(h2[None])
+        sc_all.append(c2[None])
+        sn_all.append(n2[None])
+    cache = {"mS": jnp.concatenate(mS_all, 0),
+             "sh": jnp.concatenate(sh_all, 0),
+             "sc": jnp.concatenate(sc_all, 0),
+             "sn": jnp.concatenate(sn_all, 0),
+             "len": jnp.asarray(x.shape[1], jnp.int32)}
+    return x, cache
+
+
+def _hybrid_prefill(x, params, cfg, positions, max_len, pad_s):
+    b, s, _ = x.shape
+    sh = params["shared_attn"]
+    every = cfg.attn_every
+    hd = cfg.hd
+
+    def m_body(h, layer):
+        hh = L.rms_norm(h, layer["ln"])
+        out, (conv_s, ssm_s) = ssm.mamba2_forward(hh, layer, cfg)
+        return h + out, (conv_s, ssm_s)
+
+    pos = 0
+    convs, ssms, ks, vs = [], [], [], []
+    while pos < cfg.n_layers:
+        n = min(every, cfg.n_layers - pos)
+        seg_p = jax.tree.map(lambda a: a[pos:pos + n], params["mamba"])
+        x, (c_seg, s_seg) = jax.lax.scan(m_body, x, seg_p)
+        convs.append(c_seg)
+        ssms.append(s_seg)
+        pos += n
+        h = L.rms_norm(x, sh["ln1"])
+        a, (k, v) = _attn_prefill(h, sh, cfg, positions, None, causal=True,
+                                  with_kv=True)
+        ks.append(k[None])
+        vs.append(v[None])
+        x = x + a
+        h = L.rms_norm(x, sh["ln2"])
+        x = x + L.mlp(h, sh.get("w_gate"), sh["w_in"], sh["w_out"], "swiglu")
+    cache = {"conv": jnp.concatenate(convs, 0),
+             "ssm": jnp.concatenate(ssms, 0),
+             "k": jnp.pad(jnp.concatenate(ks, 0),
+                          ((0, 0), (0, 0), (0, pad_s), (0, 0), (0, 0))),
+             "v": jnp.pad(jnp.concatenate(vs, 0),
+                          ((0, 0), (0, 0), (0, pad_s), (0, 0), (0, 0))),
+             "len": jnp.asarray(s, jnp.int32)}
+    return x, cache

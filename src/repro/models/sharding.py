@@ -1,0 +1,137 @@
+"""PartitionSpec trees for the production mesh.
+
+Policy (DESIGN.md Sec. 5): batch over (pod, data); vocab + attention-head /
+ffn / expert dims over `model`; KV projections replicated over `model`
+(avoids kv_heads < mesh divisibility issues — the cache itself is S-sharded
+at decode); FSDP models additionally shard the d_model dim of large weights
+over `data`.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def _leaf_spec(name: str, shape, cfg: ModelConfig, stacked: bool) -> P:
+    fs = "data" if cfg.fsdp else None
+    tp = "model"
+
+    def wrap(*dims):
+        return P(*(((None,) if stacked else ()) + dims))
+
+    # norms / small vectors
+    if len(shape) - (1 if stacked else 0) <= 1:
+        return wrap(None)
+    if name == "embed":
+        return P(tp, fs)
+    if name in ("wq", "xq", "w_gate", "w_in", "sh_gate", "sh_in", "w_q",
+                "w_k", "w_v", "w_o", "w_z", "w_gates", "r_gates", "wq_b",
+                "wkv_b"):
+        return wrap(fs, tp)
+    if name in ("wk", "wv", "xk", "xv", "wq_a", "wkv_a", "w_bc", "w_dt"):
+        return wrap(fs, None)
+    if name in ("wo", "xo", "w_out", "sh_out"):
+        return wrap(tp, fs)
+    if name == "router":
+        return wrap(fs, None)
+    if name in ("e_gate", "e_in"):
+        return wrap(tp, fs, None)
+    if name == "e_out":
+        return wrap(tp, None, fs)
+    if name == "conv_w":
+        return wrap(None, tp)
+    return wrap(*([None] * (len(shape) - (1 if stacked else 0))))
+
+
+_STACKED_GROUPS = ("blocks", "enc_blocks", "cross", "mlstm", "slstm", "mamba")
+
+
+def _fit(spec: P, shape, mesh) -> P:
+    """Drop sharding on axes the dimension size can't divide evenly."""
+    axes = tuple(spec) + (None,) * (len(shape) - len(spec))
+    out = []
+    for dim, ax in zip(shape, axes):
+        if ax is None:
+            out.append(None)
+            continue
+        names = ax if isinstance(ax, tuple) else (ax,)
+        ways = 1
+        for a in names:
+            ways *= mesh.shape[a]
+        out.append(ax if (ways and dim % ways == 0) else None)
+    return P(*out)
+
+
+def param_pspecs(cfg: ModelConfig, shapes: Dict[str, Any], mesh) -> Dict[str, Any]:
+    """PartitionSpec tree mirroring ``param_shapes(cfg)``."""
+
+    def walk(tree, group):
+        out = {}
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                out[k] = walk(v, k)
+            else:
+                stacked = group in _STACKED_GROUPS
+                out[k] = _fit(_leaf_spec(k, v, cfg, stacked), v, mesh)
+        return out
+
+    return walk(shapes, "")
+
+
+def batch_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_spec(mesh, batch: int) -> P:
+    """Shard batch over (pod, data) when divisible; else replicate."""
+    axes = batch_axes(mesh)
+    ways = 1
+    for a in axes:
+        ways *= mesh.shape[a]
+    if batch % max(ways, 1) == 0 and batch >= ways:
+        return P(axes)
+    return P(None)
+
+
+def cache_pspecs(cfg: ModelConfig, cache: Dict[str, Any], mesh,
+                 batch: int) -> Dict[str, Any]:
+    """KV caches: batch over data, S over model (flash-decode sharding);
+    SSM states: batch over data, heads over model when divisible."""
+    bspec = batch_spec(mesh, batch)
+    b_ax = bspec[0] if len(bspec) else None
+
+    def spec(k, v):
+        if k == "len":
+            return P()
+        if k in ("k", "v"):        # [L?, B, S, kv, hd]
+            lead = (None,) if v.ndim == 5 else ()
+            return P(*(lead + (b_ax, "model", None, None)))
+        if k in ("ckv", "kpe"):    # [L, B, S, d]
+            return P(None, b_ax, "model", None)
+        if k == "conv":            # [L, B, W-1, d_in]
+            return P(None, b_ax, None, "model")
+        if k == "ssm":             # [L, B, H, state, dh]
+            h = cfg.n_heads
+            tp = "model" if h % mesh.shape["model"] == 0 else None
+            return P(None, b_ax, tp, None, None)
+        if k == "mS":              # [L, B, H, dh, dh+1]
+            return P(None, b_ax, None, None, None)
+        if k in ("sh", "sc", "sn"):  # [seg, B, D]
+            return P(None, b_ax, None)
+        if k == "enc_h":           # [B, S_src, D]
+            return P(b_ax, None, None)
+        return P(*([None] * v.ndim))
+
+    return {k: _fit(spec(k, v), v.shape, mesh) for k, v in cache.items()}
+
+
+def to_shape_dtype(tree, mesh, pspecs):
+    """Attach NamedShardings to a ShapeDtypeStruct tree (dry-run inputs)."""
+    return jax.tree.map(
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                          sharding=NamedSharding(mesh, s)),
+        tree, pspecs)

@@ -1,0 +1,212 @@
+"""Sequence-state models: shared chunked gated-linear-attention core
+(the SSD duality — Mamba-2 and mLSTM are the same chunkwise recurrence with
+different gate parameterizations), Mamba2 block, mLSTM, sLSTM.
+
+Recurrence:  S_t = a_t * S_{t-1} + g_t * k_t v_t^T ;  y_t = q_t · S_t
+Chunkwise:   intra-chunk attention with decay matrix D_ij = exp(L_i - L_j),
+             inter-chunk via the carried state — one lax.scan over chunks,
+             O(S·C) memory, matmul-dominated (MXU-friendly).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_gla(q, k, v, log_a, gate, chunk: int = 128,
+                state0: Optional[jax.Array] = None):
+    """q,k: [B,S,H,dk]; v: [B,S,H,dv]; log_a, gate: [B,S,H].
+
+    Returns (y [B,S,H,dv], final_state [B,H,dk,dv]).
+    log_a <= 0 (per-token log decay); gate >= 0 (input gate).
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, s)
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        z4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        z3 = ((0, 0), (0, pad), (0, 0))
+        q, k, v = jnp.pad(q, z4), jnp.pad(k, z4), jnp.pad(v, z4)
+        log_a, gate = jnp.pad(log_a, z3), jnp.pad(gate, z3)
+
+    def to_chunks(x):
+        return x.reshape((b, nc, chunk) + x.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    lac, gc = to_chunks(log_a), to_chunks(gate)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(S, inp):
+        qb, kb, vb, la, g = inp            # [B,C,H,*], [B,C,H]
+        L = jnp.cumsum(la, axis=1)         # [B,C,H] inclusive
+        total = L[:, -1:, :]               # [B,1,H]
+        # intra-chunk: D_ij = exp(L_i - L_j) for j<=i, times gate_j
+        Ld = L[:, :, None, :] - L[:, None, :, :]           # [B,C,C,H] i,j
+        D = jnp.where(tri[None, :, :, None], jnp.exp(Ld), 0.0)
+        sc = jnp.einsum("bihd,bjhd->bijh", qb.astype(jnp.float32),
+                        kb.astype(jnp.float32))
+        w = sc * D * g[:, None, :, :]
+        y_intra = jnp.einsum("bijh,bjhd->bihd", w, vb.astype(jnp.float32))
+        # inter-chunk from carried state
+        qs = qb.astype(jnp.float32) * jnp.exp(L)[..., None]
+        y_inter = jnp.einsum("bihk,bhkv->bihv", qs, S)
+        # state update: S' = S*exp(total) + sum_j exp(total - L_j) g_j k_j v_j^T
+        decay_j = jnp.exp(total - L) * g                   # [B,C,H]
+        kS = jnp.einsum("bjhk,bjhv->bhkv",
+                        kb.astype(jnp.float32) * decay_j[..., None],
+                        vb.astype(jnp.float32))
+        S_new = S * jnp.exp(total)[:, 0, :, None, None] + kS
+        return S_new, y_intra + y_inter
+
+    S0 = state0 if state0 is not None else jnp.zeros((b, h, dk, dv), jnp.float32)
+    S_final, yc = jax.lax.scan(step, S0, (qc, kc, vc, lac, gc))
+    y = yc.swapaxes(0, 1).reshape(b, nc * chunk, h, dv)[:, :s]
+    return y, S_final
+
+
+def gla_decode_step(S, q, k, v, log_a, gate):
+    """Single-token recurrence. S: [B,H,dk,dv]; q,k: [B,H,dk]; v: [B,H,dv];
+    log_a, gate: [B,H]. Returns (y [B,H,dv], S')."""
+    a = jnp.exp(log_a)[..., None, None]
+    S_new = S * a + jnp.einsum("bhk,bhv->bhkv",
+                               (k * gate[..., None]).astype(jnp.float32),
+                               v.astype(jnp.float32))
+    y = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), S_new)
+    return y, S_new
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (SSD): conv -> gates -> chunked scan -> gated output
+# ---------------------------------------------------------------------------
+
+def mamba2_forward(x, p, cfg, state: Optional[Tuple] = None, decode=False):
+    """x: [B,S,D] (S=1 when decode). p: layer params dict.
+    state: (conv_state [B,W-1,d_in], ssm_state [B,H,dstate,dh])."""
+    b, s, d = x.shape
+    d_in = cfg.ssm_expand * cfg.d_model
+    h = cfg.n_heads
+    dh = d_in // h
+    xz = x @ p["w_in"]                                   # [B,S,d_in]
+    z = x @ p["w_z"]
+    bc = x @ p["w_bc"]                                   # [B,S,2*dstate]
+    dt = jax.nn.softplus(x @ p["w_dt"] + p["dt_bias"])   # [B,S,H]
+    B_, C_ = jnp.split(bc, 2, axis=-1)                   # [B,S,dstate]
+    # depthwise causal conv over sequence
+    w = cfg.conv_width
+    if decode:
+        conv_state = state[0]                            # [B, w-1, d_in]
+        window = jnp.concatenate([conv_state, xz], axis=1)  # [B, w, d_in]
+        xc = jnp.einsum("bwd,wd->bd", window, p["conv_w"])[:, None, :]
+        new_conv_state = window[:, 1:]
+    else:
+        xc = _causal_depthwise_conv(xz, p["conv_w"])
+        new_conv_state = xz[:, -(w - 1):] if s >= w - 1 else jnp.pad(
+            xz, ((0, 0), (w - 1 - s, 0), (0, 0)))
+    xc = jax.nn.silu(xc)
+    xh = xc.reshape(b, -1, h, dh)                        # [B,S,H,dh]
+    log_a = -dt * jnp.exp(p["A_log"])                    # [B,S,H]
+    # B_, C_ shared across heads (n_groups=1)
+    k = jnp.broadcast_to(B_[:, :, None, :], (b, xh.shape[1], h, B_.shape[-1]))
+    q = jnp.broadcast_to(C_[:, :, None, :], k.shape)
+    gate = dt                                            # input scale
+    if decode:
+        y, ssm_state = gla_decode_step(state[1], q[:, 0], k[:, 0], xh[:, 0],
+                                       log_a[:, 0], gate[:, 0])
+        y = y[:, None]
+    else:
+        y, ssm_state = chunked_gla(q, k, xh, log_a, gate)
+    y = y + xh.astype(jnp.float32) * p["D_skip"][None, None, :, None]
+    y = y.reshape(b, -1, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["w_out"]
+    return out, (new_conv_state, ssm_state)
+
+
+def _causal_depthwise_conv(x, w):
+    """x: [B,S,C]; w: [W,C] — depthwise causal conv."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = 0.0
+    for i in range(width):
+        out = out + xp[:, i:i + x.shape[1]] * w[i]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM): matrix memory, chunkwise via the same GLA core
+# ---------------------------------------------------------------------------
+
+def mlstm_forward(x, p, cfg, state: Optional[Tuple] = None, decode=False):
+    """x: [B,S,D]. Matrix-memory LSTM with normalizer (denominator tracked
+    by augmenting v with a ones column).
+
+    Simplification noted in DESIGN.md: sigmoid-normalized input gates stand
+    in for the exponential-gate + global-stabilizer kernel detail; compute
+    and memory structure (and thus the roofline) are unchanged.
+    """
+    b, s, d = x.shape
+    d_in = cfg.ssm_expand * cfg.d_model
+    h = cfg.n_heads
+    dh = d_in // h
+    q = (x @ p["w_q"]).reshape(b, s, h, dh)
+    k = (x @ p["w_k"]).reshape(b, s, h, dh) * (dh ** -0.5)
+    v = (x @ p["w_v"]).reshape(b, s, h, dh)
+    gates = x @ p["w_gates"]                              # [B,S,2H]
+    i_g = jax.nn.sigmoid(gates[..., :h])
+    f_g = jax.nn.sigmoid(gates[..., h:]) * 0.999 + 0.0005
+    log_a = jnp.log(f_g)
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    if decode:
+        y_aug, S = gla_decode_step(state[0], q[:, 0], k[:, 0], v_aug[:, 0],
+                                   log_a[:, 0], i_g[:, 0])
+        y_aug = y_aug[:, None]
+    else:
+        s0 = state[0] if state is not None else None
+        y_aug, S = chunked_gla(q, k, v_aug, log_a, i_g, state0=s0)
+    y = y_aug[..., :dh] / jnp.maximum(jnp.abs(y_aug[..., dh:]), 1e-2)
+    y = y.reshape(b, -1, d_in).astype(x.dtype)
+    o = jax.nn.sigmoid(x @ p["w_o"])
+    out = (y * o) @ p["w_out"]
+    return out, (S,)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block: scalar memory, sequential token scan (not parallelizable —
+# the xLSTM paper's own caveat; on TPU this is a lax.scan)
+# ---------------------------------------------------------------------------
+
+def slstm_forward(x, p, cfg, state: Optional[Tuple] = None, decode=False):
+    """x: [B,S,D]. Gates from input + recurrent hidden projection."""
+    b, s, d = x.shape
+    hdim = d  # hidden size = d_model
+
+    def cell(carry, xt):
+        hprev, cprev, nprev = carry
+        g = xt @ p["w_gates"] + hprev @ p["r_gates"]      # [B, 4D]
+        i_t = jnp.exp(jnp.clip(g[..., :d], -10, 5))
+        f_t = jax.nn.sigmoid(g[..., d:2 * d])
+        z_t = jnp.tanh(g[..., 2 * d:3 * d])
+        o_t = jax.nn.sigmoid(g[..., 3 * d:])
+        c = f_t * cprev + i_t * z_t
+        n = f_t * nprev + i_t
+        hnew = o_t * c / jnp.maximum(n, 1.0)
+        return (hnew, c, n), hnew
+
+    if state is None:
+        state = (jnp.zeros((b, hdim), jnp.float32),
+                 jnp.zeros((b, hdim), jnp.float32),
+                 jnp.zeros((b, hdim), jnp.float32))
+    if decode:
+        carry, h_seq = cell(state, x[:, 0].astype(jnp.float32))
+        h_seq = h_seq[:, None]
+    else:
+        carry, h_seq = jax.lax.scan(cell, state,
+                                    x.swapaxes(0, 1).astype(jnp.float32))
+        h_seq = h_seq.swapaxes(0, 1)
+    out = h_seq.astype(x.dtype) @ p["w_out"]
+    return out, carry

@@ -1,0 +1,10 @@
+"""Columnar relational engine in pure JAX.
+
+Tables are struct-of-arrays with a static row capacity and a validity mask
+(XLA requires static shapes). All relational operators are pure functions
+Table -> Table and fully jit/vmap/shard_map compatible.
+"""
+from repro.relational.table import Table
+from repro.relational import ops
+
+__all__ = ["Table", "ops"]

@@ -1,0 +1,190 @@
+"""Relational operators over static-shape columnar Tables.
+
+Semantics (mask-aware):
+  - ``filter``     : valid &= predicate(valid rows); never changes capacity.
+  - ``compact``    : physically gathers valid rows to the front of a (usually
+                     smaller) static capacity. This is how filter/project
+                     pushdown pays off on TPU: downstream per-row ML compute
+                     is proportional to *capacity*, not to live rows.
+  - ``project``    : adds/overwrites columns (row-aligned compute).
+  - ``fk_join``    : inner equi-join where the right side's key is unique
+                     (dimension table). Output capacity == left capacity.
+  - ``cross_join`` : cartesian product, capacity Na*Nb.
+  - ``aggregate``  : group-by over one key column with sum/mean/count/min/max,
+                     output capacity = static group bound.
+  - ``union_all``  : concatenation.
+
+All functions are jit-compatible and differentiable where meaningful.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Mapping, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.relational.table import Table
+
+_INT_SENTINEL = jnp.iinfo(jnp.int32).max
+
+
+# ---------------------------------------------------------------------------
+# filter / compact / project
+# ---------------------------------------------------------------------------
+
+def filter_(t: Table, mask: jax.Array) -> Table:
+    """Keep rows where ``mask`` holds. ``mask`` is bool[capacity]."""
+    return Table(columns=t.columns, valid=t.valid & mask)
+
+
+def compact(t: Table, capacity: int) -> Table:
+    """Gather valid rows to the front of a new static ``capacity``.
+
+    If there are more valid rows than ``capacity`` the extra rows are dropped
+    (the optimizer only compacts when its selectivity bound says this cannot
+    happen; tests exercise the bound).
+    """
+    n = t.capacity
+    # stable order: valid rows first, preserving relative order.
+    order = jnp.argsort(jnp.where(t.valid, 0, 1), stable=True)
+    take = order[:capacity] if capacity <= n else jnp.pad(order, (0, capacity - n))
+    cols = {k: v[take] for k, v in t.columns.items()}
+    rank = jnp.arange(capacity)
+    nvalid = t.num_valid()
+    valid = rank < jnp.minimum(nvalid, capacity)
+    if capacity > n:
+        valid = valid & (rank < n)
+    return Table(columns=cols, valid=valid)
+
+
+def project(t: Table, new_columns: Mapping[str, jax.Array], keep: Sequence[str] | None = None) -> Table:
+    """Add/overwrite columns; optionally restrict the kept input columns."""
+    base = t if keep is None else t.select(keep)
+    return base.with_columns(dict(new_columns))
+
+
+# ---------------------------------------------------------------------------
+# joins
+# ---------------------------------------------------------------------------
+
+def fk_join(left: Table, right: Table, left_key: str, right_key: str,
+            rprefix: str = "") -> Table:
+    """Inner FK equi-join: every left row matches <=1 valid right row.
+
+    Right keys are assumed unique among valid rows (dimension table). Output
+    rows align with left rows; unmatched left rows become invalid.
+    """
+    lk = jnp.asarray(left[left_key], jnp.int32)
+    rk = jnp.asarray(right[right_key], jnp.int32)
+    rk_m = jnp.where(right.valid, rk, _INT_SENTINEL)
+    order = jnp.argsort(rk_m)
+    sorted_keys = rk_m[order]
+    pos = jnp.searchsorted(sorted_keys, lk)
+    pos_c = jnp.clip(pos, 0, rk.shape[0] - 1)
+    matched = (sorted_keys[pos_c] == lk) & (lk != _INT_SENTINEL)
+    src = order[pos_c]
+    cols = dict(left.columns)
+    for name, col in right.columns.items():
+        out_name = rprefix + name
+        if out_name == left_key and name == right_key:
+            continue  # join key identical; keep left copy
+        cols[out_name] = col[src]
+    valid = left.valid & matched & right.valid[src]
+    return Table(columns=cols, valid=valid)
+
+
+def cross_join(a: Table, b: Table, aprefix: str = "", bprefix: str = "") -> Table:
+    """Cartesian product. Row (ia, ib) lands at index ia * Nb + ib."""
+    na, nb = a.capacity, b.capacity
+    cols: Dict[str, jax.Array] = {}
+    for name, col in a.columns.items():
+        cols[aprefix + name] = jnp.repeat(col, nb, axis=0, total_repeat_length=na * nb)
+    for name, col in b.columns.items():
+        cols[bprefix + name] = jnp.tile(col, (na,) + (1,) * (col.ndim - 1))
+    valid = jnp.repeat(a.valid, nb, total_repeat_length=na * nb) & jnp.tile(b.valid, (na,))
+    return Table(columns=cols, valid=valid)
+
+
+# ---------------------------------------------------------------------------
+# aggregate
+# ---------------------------------------------------------------------------
+
+_AGG_KINDS = ("sum", "mean", "count", "min", "max")
+
+
+def _dense_group_ids(keys: jax.Array, valid: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Map arbitrary int32 keys (valid rows) to dense ids [0..G).
+
+    Returns (gid[N] with invalid rows mapped to a padding id, rep_key[N]
+    giving the key value for each dense id slot, num_groups scalar).
+    """
+    n = keys.shape[0]
+    km = jnp.where(valid, keys.astype(jnp.int32), _INT_SENTINEL)
+    order = jnp.argsort(km)
+    s = km[order]
+    newseg = jnp.concatenate([jnp.array([True]), s[1:] != s[:-1]])
+    newseg = newseg & (s != _INT_SENTINEL)
+    gid_sorted = jnp.cumsum(newseg.astype(jnp.int32)) - 1
+    gid_sorted = jnp.where(s == _INT_SENTINEL, n, gid_sorted)  # pad bucket
+    inv = jnp.argsort(order)
+    gid = gid_sorted[inv]
+    num_groups = jnp.sum(newseg.astype(jnp.int32))
+    # representative key per dense id (first occurrence in sorted order)
+    rep = jnp.full((n,), _INT_SENTINEL, jnp.int32)
+    rep = rep.at[jnp.where(newseg, gid_sorted, n)].set(s, mode="drop")
+    return gid, rep, num_groups
+
+
+def aggregate(t: Table, key: str, aggs: Mapping[str, Tuple[str, str]],
+              num_groups: int) -> Table:
+    """Group by ``key``; ``aggs`` maps out_name -> (kind, in_column).
+
+    kind in {sum, mean, count, min, max}. Output capacity = ``num_groups``
+    (static upper bound on distinct keys; rows beyond the bound are dropped).
+    The group key is emitted under its original name.
+    """
+    gid, rep, ng = _dense_group_ids(t[key], t.valid)
+    if rep.shape[0] < num_groups:  # more group slots than input rows
+        rep = jnp.pad(rep, (0, num_groups - rep.shape[0]),
+                      constant_values=_INT_SENTINEL)
+    seg = jnp.where(gid < num_groups, gid, num_groups)  # overflow+padding bucket
+    ones = t.valid.astype(jnp.float32)
+    counts = jax.ops.segment_sum(ones, seg, num_segments=num_groups + 1)[:num_groups]
+    cols: Dict[str, jax.Array] = {key: rep[:num_groups]}
+    for out_name, (kind, in_col) in aggs.items():
+        if kind not in _AGG_KINDS:
+            raise ValueError(f"unknown agg kind {kind}")
+        if kind == "count":
+            cols[out_name] = counts
+            continue
+        x = t[in_col].astype(jnp.float32)
+        mask = t.valid
+        if x.ndim > 1:
+            mask = mask.reshape((-1,) + (1,) * (x.ndim - 1))
+        if kind in ("sum", "mean"):
+            xm = jnp.where(mask, x, 0.0)
+            s = jax.ops.segment_sum(xm, seg, num_segments=num_groups + 1)[:num_groups]
+            if kind == "mean":
+                denom = jnp.maximum(counts, 1.0)
+                denom = denom.reshape((-1,) + (1,) * (x.ndim - 1)) if x.ndim > 1 else denom
+                s = s / denom
+            cols[out_name] = s
+        elif kind == "min":
+            xm = jnp.where(mask, x, jnp.inf)
+            cols[out_name] = jax.ops.segment_min(xm, seg, num_segments=num_groups + 1)[:num_groups]
+        else:  # max
+            xm = jnp.where(mask, x, -jnp.inf)
+            cols[out_name] = jax.ops.segment_max(xm, seg, num_segments=num_groups + 1)[:num_groups]
+    valid = jnp.arange(num_groups) < jnp.minimum(ng, num_groups)
+    return Table(columns=cols, valid=valid)
+
+
+# ---------------------------------------------------------------------------
+# set ops
+# ---------------------------------------------------------------------------
+
+def union_all(a: Table, b: Table) -> Table:
+    if set(a.columns) != set(b.columns):
+        raise ValueError("union_all requires identical schemas")
+    cols = {k: jnp.concatenate([a.columns[k], b.columns[k]], axis=0) for k in a.columns}
+    return Table(columns=cols, valid=jnp.concatenate([a.valid, b.valid]))

@@ -1,0 +1,2 @@
+"""Training substrate: optimizer, checkpointing, fault tolerance, elastic
+re-meshing, gradient compression, straggler mitigation."""

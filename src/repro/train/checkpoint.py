@@ -1,0 +1,126 @@
+"""Fault-tolerant checkpointing.
+
+Writes one .npz per (host) shard plus a JSON manifest carrying step, config
+hash, mesh descriptor and tree structure. Restore validates the manifest,
+re-shards onto the (possibly different) current mesh, and resumes. Atomic
+via write-to-tmp + rename so a preemption mid-save never corrupts the latest
+checkpoint; retention keeps the last K steps.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Dict[str, str]]:
+    flat, dtypes = {}, {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        dtypes[key] = str(arr.dtype)
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16)  # npz has no native bf16
+        flat[key] = arr
+    return flat, dtypes
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def config_hash(cfg) -> str:
+    return hashlib.sha1(repr(cfg).encode()).hexdigest()[:16]
+
+
+def save(ckpt_dir: str, step: int, state: Any, cfg=None,
+         mesh_descr: str = "", keep: int = 3) -> str:
+    """Atomic checkpoint save. Returns the checkpoint path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    try:
+        flat, dtypes = _flatten(state)
+        np.savez(os.path.join(tmp, "shard_0.npz"), **flat)
+        manifest = {
+            "step": step,
+            "config_hash": config_hash(cfg) if cfg is not None else None,
+            "mesh": mesh_descr,
+            "keys": sorted(flat.keys()),
+            "shapes": {k: list(v.shape) for k, v in flat.items()},
+            "dtypes": dtypes,
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _retain(ckpt_dir, keep)
+    return final
+
+
+def _retain(ckpt_dir: str, keep: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and
+             os.path.exists(os.path.join(ckpt_dir, d, "manifest.json"))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, template: Any, step: Optional[int] = None,
+            cfg=None, shardings=None) -> Tuple[Any, int]:
+    """Restore into the structure of ``template``; validates config hash;
+    re-shards with ``shardings`` (pytree of NamedSharding) when given —
+    this is the elastic-rescale path."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    if cfg is not None and manifest["config_hash"] not in (None,
+                                                           config_hash(cfg)):
+        raise ValueError("checkpoint config hash mismatch — refusing to load "
+                         f"({manifest['config_hash']} != {config_hash(cfg)})")
+    data = np.load(os.path.join(path, "shard_0.npz"))
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in paths:
+        key = "/".join(_path_str(x) for x in p)
+        arr = data[key]
+        if manifest["dtypes"].get(key) == "bfloat16":
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        if not hasattr(leaf, "shape"):  # python scalar leaf (e.g. pipe state)
+            leaves.append(type(leaf)(arr.item()))
+            continue
+        if list(arr.shape) != list(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    state = jax.tree_util.tree_unflatten(treedef, [l for l in leaves])
+    if shardings is not None:
+        state = jax.device_put(state, shardings)
+    return state, step

@@ -1,0 +1,80 @@
+"""Gradient compression: int8 quantized all-reduce with error feedback.
+
+For cross-pod data parallelism the gradient all-reduce crosses the slow
+inter-pod links; 4x compression (f32 -> int8 + per-tensor scale) with an
+error-feedback accumulator preserves convergence (1-bit Adam / EF-SGD
+lineage). Used by the train loop when ``compress_grads=True``; unit-tested
+for bounded error and error-feedback exactness over repeated steps.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def _unzip3(tree_fn, a, b):
+    la, treedef = jax.tree.flatten(a)
+    lb = jax.tree.leaves(b)
+    xs, ys, zs = [], [], []
+    for ga, gb in zip(la, lb):
+        x, y, z = tree_fn(ga, gb)
+        xs.append(x)
+        ys.append(y)
+        zs.append(z)
+    un = jax.tree.unflatten
+    return un(treedef, xs), un(treedef, ys), un(treedef, zs)
+
+
+def compress_tree(grads: Any, error: Any):
+    """Quantize a gradient pytree with error feedback.
+
+    Returns ((q_tree, scale_tree), new_error_tree)."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = quantize(g32)
+        return q, s, g32 - dequantize(q, s)
+
+    qs, ss, es = _unzip3(one, grads, error)
+    return (qs, ss), es
+
+
+def decompress_tree(q_and_scale) -> Any:
+    qs, ss = q_and_scale
+    return jax.tree.map(dequantize, qs, ss)
+
+
+def compressed_psum(grads: Any, error: Any, axis_name: str):
+    """Quantize -> psum(int32) -> dequantize, with error-feedback state.
+
+    shard_map-compatible: the wire format is int8 widened to int32 for the
+    accumulation (safe for <= 2^23 replicas)."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = quantize(g32)
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        s_max = jax.lax.pmax(s, axis_name)
+        n = jax.lax.psum(1, axis_name)
+        mean = total.astype(jnp.float32) * s_max / n
+        return mean, g32 - dequantize(q, s), None
+
+    summed, new_err, _ = _unzip3(one, grads, error)
+    return summed, new_err
+
+
+def init_error(grads_template: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                        grads_template)

@@ -1,0 +1,53 @@
+"""Elastic scaling: rebuild the mesh from the surviving device count and
+re-shard training state.
+
+Policy: the model axis is preserved (its degree is baked into the layer
+shardings and kernel block shapes); the data-parallel degree shrinks/grows to
+``devices // model_parallel``. Any devices beyond data*model are left idle
+(reported). State moves via jax.device_put with the new NamedShardings —
+on a real fleet this is the resharding all-gather/scatter; the checkpoint
+path (restore with new shardings) covers the full-restart case.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.models import sharding as shd
+
+
+def plan_new_mesh(n_devices: int, model_parallel: int) -> Tuple[int, int, int]:
+    """Returns (data, model, idle) for the surviving device count."""
+    model = min(model_parallel, n_devices)
+    data = max(n_devices // model, 1)
+    idle = n_devices - data * model
+    return data, model, idle
+
+
+def remesh(devices, model_parallel: int):
+    data, model, idle = plan_new_mesh(len(devices), model_parallel)
+    import numpy as np
+    dev_grid = np.array(devices[: data * model]).reshape(data, model)
+    mesh = jax.sharding.Mesh(dev_grid, ("data", "model"))
+    return mesh, idle
+
+
+def reshard_state(state: Any, cfg, shapes, new_mesh) -> Any:
+    """Move (params, opt_state) onto the new mesh (survivor path)."""
+    pspecs = shd.param_pspecs(cfg, shapes, new_mesh)
+
+    def to_sharding(spec):
+        return NamedSharding(new_mesh, spec)
+
+    params, opt_state = state
+    params = jax.device_put(params, jax.tree.map(to_sharding, pspecs))
+    if opt_state is not None:
+        from repro.train.optim import AdamWState
+        from jax.sharding import PartitionSpec as P
+        ospec = AdamWState(step=to_sharding(P()),
+                           mu=jax.tree.map(to_sharding, pspecs),
+                           nu=jax.tree.map(to_sharding, pspecs))
+        opt_state = jax.device_put(opt_state, ospec)
+    return params, opt_state

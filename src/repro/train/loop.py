@@ -1,0 +1,70 @@
+"""Training loop with checkpoint/restart, preemption handling, straggler
+watchdog hooks, and periodic eval. Runs on any mesh (CPU host mesh in tests,
+the production mesh on a fleet)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.tokens import TokenPipeline
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.train import checkpoint as ckpt
+from repro.train.optim import AdamW
+from repro.train.stragglers import PreemptionGuard, StragglerWatchdog
+
+
+@dataclasses.dataclass
+class TrainResult:
+    step: int
+    losses: list
+    preempted: bool = False
+    resumed_from: Optional[int] = None
+
+
+def train(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
+          ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
+          microbatches: int = 1, lr: float = 3e-4, seed: int = 0,
+          guard: Optional[PreemptionGuard] = None,
+          hook: Optional[Callable[[int, Dict], None]] = None) -> TrainResult:
+    opt = AdamW(lr=lr)
+    params = lm.init_params(cfg, jax.random.PRNGKey(seed))
+    opt_state = opt.init(params)
+    pipe = TokenPipeline(vocab=cfg.vocab, batch=batch, seq=seq, seed=seed)
+    step_fn = jax.jit(lm.make_train_step(cfg, opt, microbatches=microbatches))
+    start = 0
+    resumed_from = None
+    if ckpt_dir is not None:
+        last = ckpt.latest_step(ckpt_dir)
+        if last is not None:
+            (params, opt_state, pipe_state), start = ckpt.restore(
+                ckpt_dir, (params, opt_state, (0, 0)), cfg=cfg)
+            pipe.restore(tuple(int(x) for x in jax.tree.leaves(pipe_state)))
+            resumed_from = start
+    losses = []
+    preempted = False
+    for step in range(start, steps):
+        t0 = time.perf_counter()
+        batch_np = pipe.next_batch()
+        batch_dev = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch_dev)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if hook:
+            hook(step, {"loss": loss, "dt": time.perf_counter() - t0})
+        should_ckpt = ckpt_dir is not None and (
+            (step + 1) % ckpt_every == 0
+            or (guard is not None and guard.preempted))
+        if should_ckpt:
+            ckpt.save(ckpt_dir, step + 1,
+                      (params, opt_state, pipe.state()), cfg=cfg)
+        if guard is not None and guard.preempted:
+            preempted = True
+            break
+    return TrainResult(step=step + 1 if steps > start else start,
+                       losses=losses, preempted=preempted,
+                       resumed_from=resumed_from)

@@ -1,0 +1,72 @@
+"""AdamW over arbitrary pytrees (no optax in this container).
+
+States are pytrees mirroring the params, so pjit shards them identically to
+the parameters (first/second moments inherit the param PartitionSpecs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float | None = 1.0
+    # bf16 moments halve optimizer HBM residency — the difference between
+    # fitting and not fitting the 200B+ models on 16GB v5e chips
+    # (EXPERIMENTS §Perf iteration C3); math still runs in f32.
+    moment_dtype: str = "float32"
+
+    def _mdt(self):
+        return jnp.bfloat16 if self.moment_dtype == "bfloat16" else jnp.float32
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=self._mdt()),
+                             params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                          nu=jax.tree.map(jnp.copy, zeros))
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        if self.grad_clip is not None:
+            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                                 for g in jax.tree.leaves(grads)) + 1e-12)
+            scale = jnp.minimum(1.0, self.grad_clip / gnorm)
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        b1, b2 = self.b1, self.b2
+        mdt = self._mdt()
+        mu = jax.tree.map(
+            lambda m, g: (b1 * m.astype(jnp.float32)
+                          + (1 - b1) * g.astype(jnp.float32)).astype(mdt),
+            state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: (b2 * v.astype(jnp.float32) + (1 - b2)
+                          * jnp.square(g.astype(jnp.float32))).astype(mdt),
+            state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            mhat = m.astype(jnp.float32) / bc1
+            vhat = v.astype(jnp.float32) / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - self.lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(step=step, mu=mu, nu=nu)

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# keep the default single CPU device for smoke tests / benches — the 512-way
+# mesh is exclusive to launch/dryrun.py (assignment requirement)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

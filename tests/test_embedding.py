@@ -1,0 +1,82 @@
+"""Model2Vec / Query2Vec / WL kernel / latency head."""
+import numpy as np
+import pytest
+
+from repro.core import optimizer as om
+from repro.core import wl
+from repro.core.planner import analytic_cost_fn
+from repro.data import templates
+from repro.mlfuncs import builders
+
+
+def test_wl_kernel_properties():
+    g1 = builders.ffnn("a", [16, 32, 1], seed=0).graph
+    g2 = builders.ffnn("b", [16, 32, 1], seed=1).graph   # same structure
+    g3 = builders.decision_forest("c", 8, 4, 16, seed=2).graph
+    f1, f2, f3 = wl.graph_wl(g1), wl.graph_wl(g2), wl.graph_wl(g3)
+    assert wl.wl_similarity(f1, f1) == pytest.approx(1.0)
+    assert wl.wl_similarity(f1, f2) > wl.wl_similarity(f1, f3)
+
+
+def test_plan_wl_rewrite_invariance():
+    """Rule-generated fn-name suffixes must not change WL labels (so states
+    of rewritten plans from different queries can still collide)."""
+    plan, cat = templates.sample_query(1, seed=3, scale=0.3)
+    f1 = wl.plan_wl(plan.root, plan.registry)
+    from repro.core.rules import ALL_RULES
+    cfgs = ALL_RULES["R4-1-fuse"].configs(plan, cat)
+    if cfgs:
+        p2 = ALL_RULES["R4-1-fuse"].apply(plan, cat, cfgs[0])
+        f2 = wl.plan_wl(p2.root, p2.registry)
+        assert wl.wl_similarity(f1, f2) > 0.5
+
+
+def test_embedding_shapes_and_determinism():
+    emb = om.init_embedder(0)
+    plan, cat = templates.sample_query(2, seed=1, scale=0.3)
+    e1 = emb.embed(plan, cat)
+    e2 = emb.embed(plan, cat)
+    assert e1.shape == (393,)  # paper Sec. IV-B2 dimensionality
+    np.testing.assert_allclose(e1, e2)
+    assert abs(np.linalg.norm(e1) - 1.0) < 1e-4
+
+
+def test_contrastive_training_separates():
+    emb = om.init_embedder(0)
+    graphs = [builders.sample_model(s).graph for s in range(16)]
+    graphs = [g for g in graphs if g is not None]
+    r = om.train_model2vec(emb, graphs, steps=40, batch=8, lr=1e-4)
+    assert np.isfinite(r["loss_last"])
+
+
+def test_latency_head_learns_ranking():
+    emb = om.init_embedder(1)
+    plans, cats, costs = [], [], []
+    for t in (1, 5, 7, 11, 15, 16, 17, 18):
+        for s in range(3):
+            p, c = templates.sample_query(t, seed=100 * t + s, scale=0.3)
+            plans.append(p)
+            cats.append(c)
+            costs.append(analytic_cost_fn(c)(p))
+    om.train_query2vec(emb, plans, cats, steps=40, batch=8)
+    om.train_latency(emb, plans, cats, costs, steps=150, batch=8)
+    pred = np.array([emb.predict_latency(p, c) for p, c in zip(plans, cats)])
+    corr = np.corrcoef(np.log(pred + 1e-12), np.log(np.array(costs)))[0, 1]
+    assert corr > 0.5, f"latency head failed to learn ranking (corr={corr})"
+
+
+def test_two_model_vs_one_model_strategy():
+    emb = om.init_embedder(2)
+    plans, cats, costs = [], [], []
+    for t in (1, 7, 16):
+        for s in range(2):
+            p, c = templates.sample_query(t, seed=10 * t + s, scale=0.3)
+            plans.append(p)
+            cats.append(c)
+            costs.append(analytic_cost_fn(c)(p))
+    r2 = om.train_latency(emb, plans, cats, costs, steps=50, one_model=False)
+    assert not emb.one_model
+    emb1 = om.init_embedder(3)
+    r1 = om.train_latency(emb1, plans, cats, costs, steps=50, one_model=True)
+    assert emb1.one_model
+    assert np.isfinite(r1["loss_last"]) and np.isfinite(r2["loss_last"])

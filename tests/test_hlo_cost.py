@@ -1,0 +1,59 @@
+"""Trip-count-aware HLO cost model (launch/hlo_cost.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_cost
+
+
+def _flops(fn, *args):
+    c = jax.jit(fn).lower(*args).compile()
+    return hlo_cost.analyze(c.as_text())
+
+
+def test_plain_matmul():
+    x = jnp.ones((64, 128))
+    w = jnp.ones((128, 256))
+    r = _flops(lambda a, b: a @ b, x, w)
+    assert r["flops"] == pytest.approx(2 * 64 * 128 * 256, rel=0.05)
+
+
+def test_scan_multiplies_trip_count():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y.sum()
+    x = jnp.ones((64, 128), jnp.bfloat16)
+    w = jnp.ones((128, 128), jnp.bfloat16)
+    r = _flops(f, x, w)
+    assert r["flops"] == pytest.approx(7 * 2 * 64 * 128 * 128, rel=0.05)
+    assert r["unknown_loops"] == 0
+
+
+def test_nested_scans():
+    def g(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, None, length=4)
+        return y.sum()
+    x = jnp.ones((64, 128))
+    w = jnp.ones((128, 128))
+    r = _flops(g, x, w)
+    assert r["flops"] == pytest.approx(12 * 2 * 64 * 128 * 128, rel=0.05)
+
+
+def test_collective_parse():
+    from repro.launch.hlo_stats import collective_bytes
+    hlo = """
+ENTRY %main (p: f32[8,16]) -> f32[8,16] {
+  %p = f32[8,16]{1,0} parameter(0)
+  ROOT %ar = f32[8,16]{1,0} all-reduce(%p), replica_groups={}
+}
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 8 * 16 * 4

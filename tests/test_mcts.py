@@ -1,0 +1,85 @@
+"""MCTS optimizers: vanilla finds improvements, reusable shares state across
+queries (collision rate), strategies preserve results on real workloads."""
+import numpy as np
+import pytest
+
+from repro.core.executor import execute
+from repro.core.mcts import ReusableMCTS, VanillaMCTS, configure_action
+from repro.core.planner import (STRATEGIES, analytic_cost_fn, optimize_greedy,
+                                optimize_vanilla_mcts)
+from repro.data import workloads, templates
+
+
+@pytest.fixture(scope="module")
+def rec_q1():
+    return workloads.rec_q1(scale=0.4)
+
+
+def test_configure_action_returns_best_config(rec_q1):
+    w = rec_q1
+    cost_fn = analytic_cost_fn(w.catalog)
+    res = configure_action(w.plan, w.catalog, "R4-1-split", cost_fn)
+    assert res is not None
+    plan2, cfg = res
+    assert cfg.rule == "R4-1-split"
+
+
+def test_vanilla_mcts_improves_cost(rec_q1):
+    w = rec_q1
+    cost_fn = analytic_cost_fn(w.catalog, memory_budget=w.memory_budget)
+    m = VanillaMCTS(w.catalog, cost_fn, iterations=25, seed=0)
+    best, stats = m.optimize(w.plan)
+    assert stats["speedup"] > 1.5
+    # and the optimized plan is still correct
+    a = execute(w.plan, w.catalog).canonical()
+    b = execute(best, w.catalog).canonical()
+    for k in a:
+        np.testing.assert_allclose(a[k], b[k], rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("strategy", ["arbitrary", "heuristic", "greedy"])
+def test_strategies_preserve_results(rec_q1, strategy):
+    w = rec_q1
+    fn = STRATEGIES[strategy]
+    p2, _ = fn(w.plan, w.catalog, cost_fn=analytic_cost_fn(w.catalog),
+               memory_budget=w.memory_budget)
+    a = execute(w.plan, w.catalog).canonical()
+    b = execute(p2, w.catalog).canonical()
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_allclose(a[k], b[k], rtol=5e-4, atol=5e-4)
+
+
+def test_reusable_mcts_state_sharing():
+    """Two parameter-variants of the same template should collide in the
+    embedding-keyed node store (the paper's 89% ID collision mechanism).
+    Uses an untrained embedder — identical structure still embeds nearby."""
+    from repro.core import optimizer as om
+    emb = om.init_embedder(0)
+    r = ReusableMCTS(
+        catalog_fn=None, embed_fn=emb.embed,
+        cost_fn_factory=lambda cat: analytic_cost_fn(cat),
+        iterations=8, warm_iterations=3, sim_threshold=0.98, seed=0)
+    p1, c1 = templates.sample_query(4, seed=1, scale=0.3)
+    p2, c2 = templates.sample_query(4, seed=2, scale=0.3)
+    out1, s1 = r.optimize(p1, c1)
+    out2, s2 = r.optimize(p2, c2)
+    assert not s1["collision"]
+    assert s2["collision"], "same-template query should match the stored root"
+    assert s2["iterations"] < s1["iterations"]
+    assert r.collision_rate == 0.5
+    assert r.storage_bytes() > 0
+
+
+def test_reusable_mcts_correctness():
+    from repro.core import optimizer as om
+    emb = om.init_embedder(0)
+    r = ReusableMCTS(catalog_fn=None, embed_fn=emb.embed,
+                     cost_fn_factory=lambda cat: analytic_cost_fn(cat),
+                     iterations=10, seed=1)
+    plan, cat = templates.sample_query(11, seed=5, scale=0.3)
+    best, stats = r.optimize(plan, cat)
+    a = execute(plan, cat).canonical()
+    b = execute(best, cat).canonical()
+    for k in a:
+        np.testing.assert_allclose(a[k], b[k], rtol=5e-4, atol=5e-4)

@@ -1,0 +1,162 @@
+"""Relational engine vs numpy oracle — unit + hypothesis property tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.relational import ops, oracle
+from repro.relational.table import Table
+
+
+def mk_table(rng, n, with_vec=True):
+    cols = {
+        "id": jnp.arange(n, dtype=jnp.int32),
+        "k": jnp.asarray(rng.integers(0, max(n // 3, 2), n), jnp.int32),
+        "x": jnp.asarray(rng.random(n) * 10, jnp.float32),
+    }
+    if with_vec:
+        cols["v"] = jnp.asarray(rng.standard_normal((n, 5)), jnp.float32)
+    return Table.from_columns(cols)
+
+
+def assert_tables_equal(t: Table, o, atol=1e-5):
+    a = t.canonical()
+    b = oracle.canonical(o)
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_allclose(a[k], b[k], rtol=1e-4, atol=atol, err_msg=k)
+
+
+def test_filter_and_compact():
+    rng = np.random.default_rng(0)
+    t = mk_table(rng, 50)
+    mask = t["x"] > 5.0
+    ft = ops.filter_(t, mask)
+    npo = oracle.filter_(t.to_numpy(), np.asarray(mask))
+    assert_tables_equal(ft, npo)
+    ct = ops.compact(ft, 32)
+    assert ct.capacity == 32
+    assert_tables_equal(ct, npo)
+
+
+def test_compact_up():
+    rng = np.random.default_rng(1)
+    t = mk_table(rng, 10)
+    ct = ops.compact(t, 16)
+    assert ct.capacity == 16
+    assert_tables_equal(ct, t.to_numpy())
+
+
+def test_fk_join():
+    rng = np.random.default_rng(2)
+    left = Table.from_columns({
+        "fk": jnp.asarray(rng.integers(0, 12, 40), jnp.int32),
+        "a": jnp.asarray(rng.random(40), jnp.float32)})
+    right = Table.from_columns({
+        "rid": jnp.arange(8, dtype=jnp.int32),
+        "b": jnp.asarray(rng.random(8), jnp.float32)})
+    j = ops.fk_join(left, right, "fk", "rid")
+    npo = oracle.fk_join(left.to_numpy(), right.to_numpy(), "fk", "rid")
+    assert_tables_equal(j, npo)
+
+
+def test_fk_join_respects_invalid_right_rows():
+    left = Table.from_columns({"fk": jnp.asarray([0, 1, 2], jnp.int32)})
+    right = Table.from_columns({"rid": jnp.asarray([0, 1, 2], jnp.int32),
+                                "b": jnp.asarray([1., 2., 3.], jnp.float32)},
+                               valid=jnp.asarray([True, False, True]))
+    j = ops.fk_join(left, right, "fk", "rid")
+    out = j.canonical()
+    np.testing.assert_array_equal(out["fk"], [0, 2])
+
+
+def test_cross_join():
+    rng = np.random.default_rng(3)
+    a, b = mk_table(rng, 6, False), mk_table(rng, 4, False)
+    b = b.rename({"id": "id2", "k": "k2", "x": "x2"})
+    x = ops.cross_join(a, b)
+    npo = oracle.cross_join(a.to_numpy(), b.to_numpy())
+    assert_tables_equal(x, npo)
+
+
+def test_aggregate():
+    rng = np.random.default_rng(4)
+    t = mk_table(rng, 60)
+    g = ops.aggregate(t, "k", {"s": ("sum", "x"), "m": ("mean", "x"),
+                               "c": ("count", "x"), "mx": ("max", "x"),
+                               "mn": ("min", "x"), "vs": ("mean", "v")},
+                      num_groups=64)
+    npo = oracle.aggregate(t.to_numpy(), "k",
+                           {"s": ("sum", "x"), "m": ("mean", "x"),
+                            "c": ("count", "x"), "mx": ("max", "x"),
+                            "mn": ("min", "x"), "vs": ("mean", "v")})
+    assert_tables_equal(g, npo, atol=1e-4)
+
+
+def test_aggregate_masked_rows_excluded():
+    t = Table.from_columns({"k": jnp.asarray([0, 0, 1], jnp.int32),
+                            "x": jnp.asarray([1., 100., 2.], jnp.float32)},
+                           valid=jnp.asarray([True, False, True]))
+    g = ops.aggregate(t, "k", {"s": ("sum", "x")}, num_groups=4)
+    out = g.canonical()
+    np.testing.assert_allclose(out["s"], [1.0, 2.0])
+
+
+def test_union_all():
+    rng = np.random.default_rng(5)
+    a, b = mk_table(rng, 5), mk_table(rng, 7)
+    u = ops.union_all(a, b)
+    npo = oracle.union_all(a.to_numpy(), b.to_numpy())
+    assert_tables_equal(u, npo)
+
+
+# -- property tests ----------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(4, 40), seed=st.integers(0, 1000),
+       thresh=st.floats(0.0, 10.0))
+def test_prop_filter_matches_oracle(n, seed, thresh):
+    rng = np.random.default_rng(seed)
+    t = mk_table(rng, n, with_vec=False)
+    mask = t["x"] > thresh
+    ft = ops.filter_(t, mask)
+    npo = oracle.filter_(t.to_numpy(), np.asarray(mask))
+    assert_tables_equal(ft, npo)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(4, 30), m=st.integers(2, 10), seed=st.integers(0, 1000))
+def test_prop_join_matches_oracle(n, m, seed):
+    rng = np.random.default_rng(seed)
+    left = Table.from_columns({
+        "fk": jnp.asarray(rng.integers(0, m + 3, n), jnp.int32),
+        "a": jnp.asarray(rng.random(n), jnp.float32)})
+    right = Table.from_columns({
+        "rid": jnp.arange(m, dtype=jnp.int32),
+        "b": jnp.asarray(rng.random(m), jnp.float32)})
+    j = ops.fk_join(left, right, "fk", "rid")
+    npo = oracle.fk_join(left.to_numpy(), right.to_numpy(), "fk", "rid")
+    assert_tables_equal(j, npo)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(4, 50), seed=st.integers(0, 1000))
+def test_prop_aggregate_matches_oracle(n, seed):
+    rng = np.random.default_rng(seed)
+    t = mk_table(rng, n, with_vec=False)
+    g = ops.aggregate(t, "k", {"s": ("sum", "x"), "c": ("count", "x")},
+                      num_groups=n + 2)
+    npo = oracle.aggregate(t.to_numpy(), "k",
+                           {"s": ("sum", "x"), "c": ("count", "x")})
+    assert_tables_equal(g, npo, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 12), m=st.integers(2, 8), seed=st.integers(0, 100))
+def test_prop_cross_join_cardinality(n, m, seed):
+    rng = np.random.default_rng(seed)
+    a = mk_table(rng, n, False)
+    b = mk_table(rng, m, False).rename({"id": "i2", "k": "k2", "x": "x2"})
+    x = ops.cross_join(a, b)
+    assert x.capacity == n * m
+    assert int(x.num_valid()) == n * m

@@ -1,0 +1,47 @@
+"""All 12 paper workloads execute; optimization preserves results end-to-end."""
+import numpy as np
+import pytest
+
+from repro.core.executor import execute
+from repro.core.planner import STRATEGIES, analytic_cost_fn
+from repro.data import workloads
+
+
+@pytest.mark.parametrize("name", sorted(workloads.ALL_WORKLOADS))
+def test_workload_executes(name):
+    w = workloads.ALL_WORKLOADS[name](scale=0.3)
+    out = execute(w.plan, w.catalog)
+    assert int(out.num_valid()) > 0
+    arrs = out.to_numpy()
+    for k, v in arrs.items():
+        assert np.isfinite(np.asarray(v, np.float64)).all(), k
+
+
+@pytest.mark.parametrize("name", ["rec_q1", "rec_q2", "retail_q1",
+                                  "retail_q2", "analytics_q1"])
+def test_optimized_workload_equivalent(name):
+    w = workloads.ALL_WORKLOADS[name](scale=0.3)
+    cost_fn = analytic_cost_fn(w.catalog, memory_budget=w.memory_budget)
+    base = execute(w.plan, w.catalog).canonical()
+    p2, stats = STRATEGIES["vanilla_mcts"](w.plan, w.catalog, cost_fn=cost_fn,
+                                           iterations=15, seed=0)
+    out = execute(p2, w.catalog).canonical()
+    assert set(base) == set(out)
+    for k in base:
+        np.testing.assert_allclose(base[k], out[k], rtol=5e-4, atol=5e-4,
+                                   err_msg=f"{name}:{k}")
+
+
+def test_templates_all_execute():
+    from repro.data import templates
+    for t in range(1, 21):
+        plan, cat = templates.sample_query(t, seed=50 + t, scale=0.3)
+        out = execute(plan, cat)
+        assert int(out.num_valid()) >= 0, f"template {t}"
+
+
+def test_ood_split():
+    from repro.data.templates import ood_split
+    ind, ood = ood_split()
+    assert len(ind) == 14 and len(ood) == 6
+    assert not set(ind) & set(ood)
