@@ -2,22 +2,31 @@
 from __future__ import annotations
 
 import time
-from typing import Callable, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 
 from repro.core import ir
-from repro.core.executor import execute_node
+from repro.core import physical as ph
+from repro.core.lowering import lower
+from repro.core.plan_cache import PlanCache
 
 
-def time_plan(plan: ir.Plan, catalog: ir.Catalog, repeats: int = 3
-              ) -> Tuple[float, float]:
-    """Returns (median wall seconds, compile seconds)."""
+def time_plan(plan: ir.Plan, catalog: ir.Catalog, repeats: int = 3,
+              cache: Optional[PlanCache] = None) -> Tuple[float, float]:
+    """Returns (median wall seconds, compile seconds).
+
+    Goes through the physical path (lower + jit). With ``cache`` given the
+    compiled executable is shared/reused through the plan cache, so the
+    compile-seconds of a repeated plan collapse to a cache lookup.
+    """
     tables = dict(catalog.tables)
-
-    @jax.jit
-    def run():
-        return execute_node(plan.root, tables, plan.registry)
+    if cache is not None:
+        run_tables = cache.get_or_compile(plan, catalog)
+        run = lambda: run_tables(tables)
+    else:
+        pplan = lower(plan, catalog)
+        run = jax.jit(lambda: ph.run(pplan, tables))
 
     t0 = time.perf_counter()
     out = run()

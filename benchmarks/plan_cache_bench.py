@@ -1,0 +1,57 @@
+"""Compiled-plan cache: repeated / parameterized query traffic.
+
+Runs each workload twice through one ``PlanCache`` — the query a serving
+tier would see from two users asking the same (structurally identical)
+question — and reports cold vs warm dispatch latency, cache hits/misses,
+and the jax trace count (a warm hit must add zero re-traces).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core.plan_cache import PlanCache
+from repro.data import workloads
+from benchmarks.common import csv_line
+
+QUERIES = ["rec_q1", "retail_q1", "simple_q2", "analytics_q1"]
+
+
+def run(scale: float = 0.5):
+    lines = []
+    cache = PlanCache()
+    for name in QUERIES:
+        w = workloads.ALL_WORKLOADS[name](scale=scale)
+        tables = dict(w.catalog.tables)
+
+        t0 = time.perf_counter()
+        fn = cache.get_or_compile(w.plan, w.catalog)
+        jax.block_until_ready(fn(tables))
+        cold_s = time.perf_counter() - t0
+        traces_after_cold = cache.traces
+
+        # second, structurally identical query (fresh Workload build → fresh
+        # logical tree and registry, same signature)
+        w2 = workloads.ALL_WORKLOADS[name](scale=scale)
+        t0 = time.perf_counter()
+        fn2 = cache.get_or_compile(w2.plan, w2.catalog)
+        jax.block_until_ready(fn2(dict(w2.catalog.tables)))
+        warm_s = time.perf_counter() - t0
+        retraces = cache.traces - traces_after_cold
+
+        lines.append(csv_line(f"plan_cache/{name}/cold", cold_s * 1e6))
+        lines.append(csv_line(
+            f"plan_cache/{name}/warm", warm_s * 1e6,
+            f"speedup={cold_s / max(warm_s, 1e-9):.1f}x retraces={retraces}"))
+    s = cache.stats
+    lines.append(csv_line(
+        "plan_cache/totals", 0.0,
+        f"hits={s.hits} misses={s.misses} hit_rate={s.hit_rate:.2f} "
+        f"traces={cache.traces}"))
+    return lines
+
+
+if __name__ == "__main__":
+    for ln in run():
+        print(ln)

@@ -21,11 +21,12 @@ def main() -> None:
     q = args.quick
 
     from benchmarks import (ablation, complex_queries, kernels_bench,
-                            optimizers, random_queries, roofline,
-                            simplified_analytics)
+                            optimizers, plan_cache_bench, random_queries,
+                            roofline, simplified_analytics)
 
     suites = {
         "kernels": lambda: kernels_bench.run(),
+        "plan_cache": lambda: plan_cache_bench.run(scale=0.3 if q else 0.5),
         "complex_queries": lambda: complex_queries.run(
             scale=0.5 if q else 1.0, iterations=15 if q else 40),
         "ablation": lambda: ablation.run(

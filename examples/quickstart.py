@@ -59,13 +59,25 @@ def main():
     print(f"estimated cost: {cost_fn(plan):.3e}s -> {cost_fn(optimized):.3e}s"
           f"  ({stats['speedup']:.1f}x, optimized in {stats['opt_seconds']:.2f}s)")
 
-    # 5. execute both, verify equivalence
+    # 5. execute both (execute lowers to the physical plan layer and runs
+    #    the fused pipelines), verify equivalence
     a = execute(plan, catalog).canonical()
     b = execute(optimized, catalog).canonical()
     for k in a:
         np.testing.assert_allclose(a[k], b[k], rtol=5e-4, atol=5e-4)
     print(f"results identical on {len(a['score'])} scored pairs — "
           "co-optimization is lossless.")
+
+    # 6. serve repeated traffic through the compiled-plan cache: a second
+    #    structurally identical query skips lowering AND jax tracing
+    from repro.core.plan_cache import PlanCache
+    cache = PlanCache()
+    tables = dict(catalog.tables)
+    cache.get_or_compile(optimized, catalog)(tables)   # miss: lower + trace
+    cache.get_or_compile(optimized, catalog)(tables)   # hit: dispatch only
+    s = cache.stats
+    print(f"plan cache: hits={s.hits} misses={s.misses} "
+          f"traces={cache.traces} (1 trace for 2 executions)")
 
 
 if __name__ == "__main__":

@@ -12,10 +12,12 @@ and is trained against measured wall-clock of compiled plans.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Mapping, Optional
 
 from repro.core import ir
 from repro.mlfuncs.registry import Registry
+
+PhysMap = Optional[Mapping[str, ir.PhysConfig]]
 
 
 @dataclasses.dataclass
@@ -42,15 +44,16 @@ def _time(flops: float, bytes_: float, profile: DeviceProfile) -> float:
 
 
 def node_cost(node: ir.RelNode, registry: Registry, catalog: ir.Catalog,
-              profile: DeviceProfile) -> float:
+              profile: DeviceProfile, phys: PhysMap = None) -> float:
     """Recursive total plan cost in seconds (analytic)."""
-    total = sum(node_cost(c, registry, catalog, profile) for c in node.children())
-    total += _local_cost(node, registry, catalog, profile)
+    total = sum(node_cost(c, registry, catalog, profile, phys)
+                for c in node.children())
+    total += _local_cost(node, registry, catalog, profile, phys)
     return total
 
 
 def _local_cost(node: ir.RelNode, registry: Registry, catalog: ir.Catalog,
-                profile: DeviceProfile) -> float:
+                profile: DeviceProfile, phys: PhysMap = None) -> float:
     if isinstance(node, ir.Scan):
         return 0.0
     if isinstance(node, ir.Filter):
@@ -95,28 +98,30 @@ def _local_cost(node: ir.RelNode, registry: Registry, catalog: ir.Catalog,
     if isinstance(node, ir.BlockedMatmul):
         ci = ir.infer(node.child, registry, catalog)
         fn = registry.get(node.fn)
+        pc = ir.resolve_phys(node, phys, registry)
         fl = fn.flops_per_row([ci.schema[node.x_col]]) * ci.capacity
         pb = fn.param_bytes()
         xby = max(ci.schema[node.x_col], 1) * profile.elem_bytes * ci.capacity
-        if node.mode == "relational":
+        if pc.mode == "relational":
             # streamed tile scan: x re-read per tile + per-tile op overhead
-            xby *= node.n_tiles
-            extra = node.n_tiles * profile.op_overhead_s
+            xby *= pc.n_tiles
+            extra = pc.n_tiles * profile.op_overhead_s
         else:
             extra = 0.0
-        bw = profile.vmem_bw if node.backend == "pallas" else profile.hbm_bw
+        bw = profile.vmem_bw if pc.backend == "pallas" else profile.hbm_bw
         t = max(fl / profile.peak_flops, (pb + 2 * xby) / bw)
         return t + profile.op_overhead_s + extra
     if isinstance(node, ir.ForestRelational):
         ci = ir.infer(node.child, registry, catalog)
         fn = registry.get(node.fn)
+        pc = ir.resolve_phys(node, phys, registry)
         fl = fn.flops_per_row([ci.schema[node.x_col]]) * ci.capacity
         pb = fn.param_bytes()
         xby = max(ci.schema[node.x_col], 1) * profile.elem_bytes * ci.capacity
-        if node.mode == "relational":
+        if pc.mode == "relational":
             p = fn.graph.nodes[0].atom.params
             xby *= p["feat"].shape[0]
-        bw = profile.vmem_bw if node.backend == "pallas" else profile.hbm_bw
+        bw = profile.vmem_bw if pc.backend == "pallas" else profile.hbm_bw
         return max(fl / profile.peak_flops, (pb + xby) / bw) + profile.op_overhead_s
     raise TypeError(type(node))
 
@@ -133,14 +138,14 @@ def _calls(e: ir.Expr):
 # ---------------------------------------------------------------------------
 
 def node_mem(node: ir.RelNode, registry: Registry, catalog: ir.Catalog,
-             profile: DeviceProfile) -> float:
+             profile: DeviceProfile, phys: PhysMap = None) -> float:
     """Peak bytes over the plan (max across operators)."""
-    peak = max((node_mem(c, registry, catalog, profile) for c in node.children()),
-               default=0.0)
-    return max(peak, _local_mem(node, registry, catalog, profile))
+    peak = max((node_mem(c, registry, catalog, profile, phys)
+                for c in node.children()), default=0.0)
+    return max(peak, _local_mem(node, registry, catalog, profile, phys))
 
 
-def _local_mem(node, registry, catalog, profile):
+def _local_mem(node, registry, catalog, profile, phys=None):
     if isinstance(node, ir.Scan):
         st = catalog.stats[node.table]
         return _row_bytes({c: s.dim for c, s in st.columns.items()}, profile) * st.capacity
@@ -152,21 +157,22 @@ def _local_mem(node, registry, catalog, profile):
             for c in _calls(e):
                 pb += registry.get(c.fn).param_bytes()
         return base + pb
-    if isinstance(node, (ir.BlockedMatmul, ir.ForestRelational)):
+    if isinstance(node, ir.BlockedMatmul):
         fn = registry.get(node.fn)
-        n_tiles = getattr(node, "n_tiles", None)
-        if n_tiles is None:  # forest: per-tree streaming
-            p = fn.graph.nodes[0].atom.params
-            n_tiles = max(int(p["feat"].shape[0]), 1)
-        # streamed: only one tile resident at a time
-        return base + fn.param_bytes() / n_tiles
+        # streamed: only one weight tile resident at a time
+        return base + fn.param_bytes() / max(ir.resolve_phys(node, phys, registry).n_tiles, 1)
+    if isinstance(node, ir.ForestRelational):
+        fn = registry.get(node.fn)
+        p = fn.graph.nodes[0].atom.params
+        n_trees = max(int(p["feat"].shape[0]), 1)  # per-tree streaming
+        return base + fn.param_bytes() / n_trees
     return base
 
 
 def plan_peak_memory(plan: ir.Plan, catalog: ir.Catalog,
                      profile: DeviceProfile | None = None) -> float:
     profile = profile or DeviceProfile()
-    return node_mem(plan.root, plan.registry, catalog, profile)
+    return node_mem(plan.root, plan.registry, catalog, profile, plan.phys)
 
 
 def plan_cost(plan: ir.Plan, catalog: ir.Catalog,
@@ -175,7 +181,7 @@ def plan_cost(plan: ir.Plan, catalog: ir.Catalog,
     """Analytic plan latency; plans whose working set exceeds the memory
     budget pay a paging/OOM penalty (mirrors the paper's OOM failures)."""
     profile = profile or DeviceProfile()
-    t = node_cost(plan.root, plan.registry, catalog, profile)
+    t = node_cost(plan.root, plan.registry, catalog, profile, plan.phys)
     if memory_budget is not None:
         peak = plan_peak_memory(plan, catalog, profile)
         if peak > memory_budget:

@@ -270,7 +270,8 @@ def featurize_plan(plan: ir.Plan, catalog: ir.Catalog) -> PlanFeatures:
                 ef, em = featurize_graph(fn.graph)
                 f.expr_feats[k], f.expr_masks[k] = ef, em
                 f.has_expr[k] = 1.0
-                f.pred_vals[k] = n.n_tiles / 16.0 + (0.5 if n.backend == "pallas" else 0.0)
+                pc = plan.phys_for(n)
+                f.pred_vals[k] = pc.n_tiles / 16.0 + (0.5 if pc.backend == "pallas" else 0.0)
             elif isinstance(n, ir.ForestRelational):
                 op = "forestrel"
                 fn = plan.registry.get(n.fn)

@@ -1,0 +1,101 @@
+"""Unified backend-parameterized expression evaluator (middle-level IR).
+
+One ``eval_expr(e, t, registry, xp=jnp|np)`` replaces the old duplicated
+pair (``executor.eval_expr`` over jnp Tables + ``np_eval.eval_np`` over numpy
+dicts). ``t`` is anything supporting ``t[col] -> array`` — a relational
+Table or a plain dict of numpy arrays; ``xp`` is the array namespace.
+
+Constants evaluate to scalars and rely on broadcasting (never a full
+``(capacity,)`` materialization); callers that need a column-shaped result
+(e.g. Project outputs) broadcast explicitly via ``as_column``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ir
+from repro.mlfuncs.registry import Registry
+
+
+def eval_expr(e: ir.Expr, t: Any, registry: Registry, xp=jnp):
+    if isinstance(e, ir.Col):
+        return t[e.name]
+    if isinstance(e, ir.Const):
+        return xp.float32(e.value)  # scalar; broadcasting handles the rest
+    if isinstance(e, ir.BinOp):
+        a = eval_expr(e.a, t, registry, xp)
+        b = eval_expr(e.b, t, registry, xp)
+        a, b = _align(a, b)
+        if e.op == "+":
+            return a + b
+        if e.op == "-":
+            return a - b
+        if e.op == "*":
+            return a * b
+        if e.op == "/":
+            return a / xp.where(b == 0, xp.float32(1e-9), b)
+        raise ValueError(e.op)
+    if isinstance(e, ir.Cmp):
+        a = eval_expr(e.a, t, registry, xp)
+        b = eval_expr(e.b, t, registry, xp)
+        a, b = _align(a, b)
+        return {"<": a < b, ">": a > b, "<=": a <= b, ">=": a >= b,
+                "==": a == b, "!=": a != b}[e.op]
+    if isinstance(e, ir.BoolOp):
+        vals = [xp.asarray(eval_expr(a, t, registry, xp)).astype(bool)
+                for a in e.args]
+        if e.op == "and":
+            return functools.reduce(xp.logical_and, vals)
+        if e.op == "or":
+            return functools.reduce(xp.logical_or, vals)
+        if e.op == "not":
+            return xp.logical_not(vals[0])
+        raise ValueError(e.op)
+    if isinstance(e, ir.IsIn):
+        a = xp.asarray(eval_expr(e.a, t, registry, xp)).astype(xp.int32)
+        out = xp.zeros_like(a, dtype=bool)
+        for v in e.values:
+            out = out | (a == v)
+        return out
+    if isinstance(e, ir.IfExpr):
+        c = xp.asarray(eval_expr(e.cond, t, registry, xp)).astype(bool)
+        return xp.where(c, eval_expr(e.t, t, registry, xp),
+                        eval_expr(e.f, t, registry, xp))
+    if isinstance(e, ir.Call):
+        fn = registry.get(e.fn)
+        args = [jnp.asarray(eval_expr(a, t, registry, xp)) for a in e.args]
+        out = fn.apply(*args)
+        if out.ndim == 2 and out.shape[1] == 1:
+            out = out[:, 0]  # dim-1 vectors are scalar columns
+        return out if xp is jnp else np.asarray(out)
+    raise TypeError(type(e))
+
+
+def _align(a, b):
+    """Insert the broadcast axis when mixing vector [N, d] and scalar [N]
+    columns; true scalars (ndim 0) broadcast natively."""
+    a_nd = getattr(a, "ndim", 0)
+    b_nd = getattr(b, "ndim", 0)
+    if a_nd == 2 and b_nd == 1:
+        return a, b[:, None]
+    if a_nd == 1 and b_nd == 2:
+        return a[:, None], b
+    return a, b
+
+
+def as_column(val, capacity: int, xp=jnp):
+    """Broadcast a scalar evaluation result to a [capacity] column (Table
+    columns must have the row axis)."""
+    if getattr(val, "ndim", 0) == 0:
+        return xp.full((capacity,), val)
+    return val
+
+
+def has_call(e: ir.Expr) -> bool:
+    if isinstance(e, ir.Call):
+        return True
+    return any(has_call(c) for c in e.children())

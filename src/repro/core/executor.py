@@ -1,256 +1,111 @@
-"""Plan executor: compiles a Plan into a (jit-able) function Catalog → Table.
+"""Plan execution façade.
 
-The executor is the physical layer: relational operators map to
-repro.relational.ops; BlockedMatmul / ForestRelational (R3-1 / R3-2 physical
-nodes) support both a literal 'relational' realization (tile/tree relations +
-crossJoin + project + assemble, paper Fig. 2) and a pipelined 'fused'
-realization (Velox-style, no materialized product; 'pallas' backend uses the
-TPU kernels).
+The default path is the physical one: ``execute`` lowers the logical plan
+(repro.core.lowering) and runs the physical operators (repro.core.physical);
+``compile_plan`` goes through the compiled-plan cache
+(repro.core.plan_cache), so structurally repeated queries skip lowering and
+jax tracing entirely.
+
+``execute_reference`` keeps the original per-node recursive interpreter over
+the *logical* tree: the oracle for lowering-equivalence tests. It shares the
+expression evaluator and the R3 realization kernels with the physical path
+(those are covered separately by tests/test_kernels.py against the ref
+implementations); what it does NOT share — and therefore what the
+equivalence tests actually check — is the lowering, pipeline fusion, and
+side-table plumbing.
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict
+from typing import Dict, Mapping, Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import ir
+from repro.core import physical as ph
+from repro.core.evaluator import as_column, eval_expr
+from repro.core.lowering import lower
+from repro.core.plan_cache import GLOBAL_PLAN_CACHE, PlanCache
 from repro.mlfuncs.registry import Registry
 from repro.relational import ops
 from repro.relational.table import Table
 
 
 # ---------------------------------------------------------------------------
-# expression evaluation (middle-level IR)
+# default path: lower + run physical
 # ---------------------------------------------------------------------------
 
-def eval_expr(e: ir.Expr, t: Table, registry: Registry) -> jax.Array:
-    if isinstance(e, ir.Col):
-        return t[e.name]
-    if isinstance(e, ir.Const):
-        return jnp.full((t.capacity,), float(e.value), jnp.float32)
-    if isinstance(e, ir.BinOp):
-        a, b = eval_expr(e.a, t, registry), eval_expr(e.b, t, registry)
-        a, b = _align(a, b)
-        if e.op == "+":
-            return a + b
-        if e.op == "-":
-            return a - b
-        if e.op == "*":
-            return a * b
-        if e.op == "/":
-            return a / jnp.where(b == 0, 1e-9, b)
-        raise ValueError(e.op)
-    if isinstance(e, ir.Cmp):
-        a, b = eval_expr(e.a, t, registry), eval_expr(e.b, t, registry)
-        a, b = _align(a, b)
-        return {"<": a < b, ">": a > b, "<=": a <= b, ">=": a >= b,
-                "==": a == b, "!=": a != b}[e.op]
-    if isinstance(e, ir.BoolOp):
-        vals = [eval_expr(a, t, registry).astype(bool) for a in e.args]
-        if e.op == "and":
-            return functools.reduce(jnp.logical_and, vals)
-        if e.op == "or":
-            return functools.reduce(jnp.logical_or, vals)
-        if e.op == "not":
-            return jnp.logical_not(vals[0])
-        raise ValueError(e.op)
-    if isinstance(e, ir.IsIn):
-        a = eval_expr(e.a, t, registry).astype(jnp.int32)
-        out = jnp.zeros_like(a, dtype=bool)
-        for v in e.values:
-            out = out | (a == v)
-        return out
-    if isinstance(e, ir.IfExpr):
-        c = eval_expr(e.cond, t, registry).astype(bool)
-        return jnp.where(c, eval_expr(e.t, t, registry), eval_expr(e.f, t, registry))
-    if isinstance(e, ir.Call):
-        fn = registry.get(e.fn)
-        args = [eval_expr(a, t, registry) for a in e.args]
-        out = fn.apply(*args)
-        if out.ndim == 2 and out.shape[1] == 1:
-            out = out[:, 0]  # dim-1 vectors are scalar columns
-        return out
-    raise TypeError(type(e))
+def execute(plan: ir.Plan, catalog: ir.Catalog, *,
+            backend: Optional[str] = None) -> Table:
+    return ph.run(lower(plan, catalog, backend=backend), dict(catalog.tables))
 
 
-def _align(a, b):
-    if a.ndim == 2 and b.ndim == 1:
-        return a, b[:, None]
-    if a.ndim == 1 and b.ndim == 2:
-        return a[:, None], b
-    return a, b
+def compile_plan(plan: ir.Plan, catalog: ir.Catalog,
+                 cache: Optional[PlanCache] = None):
+    """Returns a jitted zero-arg callable over the catalog's tables.
 
-
-# ---------------------------------------------------------------------------
-# physical realizations of R3-1 / R3-2
-# ---------------------------------------------------------------------------
-
-def _matmul_weight(registry: Registry, fn_name: str):
-    fn = registry.get(fn_name)
-    assert fn.graph is not None and len(fn.graph.nodes) == 1
-    atom = fn.graph.nodes[0].atom
-    assert atom.kind == "matmul", f"{fn_name} is not a pure matmul"
-    return jnp.asarray(atom.params["w"])
-
-
-def blocked_matmul_fused(x: jax.Array, w: jax.Array, n_tiles: int,
-                         backend: str) -> jax.Array:
-    """Pipelined tile-at-a-time matmul over column blocks of w."""
-    if backend == "pallas":
-        from repro.kernels.block_matmul import ops as bm_ops
-        return bm_ops.block_matmul(x, w, n_tiles)
-    dout = w.shape[1]
-    tile = -(-dout // n_tiles)  # ceil
-    pad = tile * n_tiles - dout
-    wp = jnp.pad(w, ((0, 0), (0, pad)))
-    tiles = wp.reshape(w.shape[0], n_tiles, tile).transpose(1, 0, 2)  # [T, din, tile]
-
-    def body(carry, wt):
-        return carry, x @ wt
-
-    _, blocks = jax.lax.scan(body, 0, tiles)  # [T, N, tile]
-    out = blocks.transpose(1, 0, 2).reshape(x.shape[0], n_tiles * tile)
-    return out[:, :dout]
-
-
-def blocked_matmul_relational(t: Table, x_col: str, w: jax.Array,
-                              n_tiles: int) -> jax.Array:
-    """Literal tensor-relational pipeline (paper Fig. 2):
-    tile relation W(colId, tile) -> crossJoin -> project -> assemble.
-
-    The crossJoin is *streamed* one tile at a time (the paper's buffer-pool
-    scan / Velox pipelining): each scan step joins T with a single-tile
-    relation, projects the per-pair block, and emits it; assembly
-    concatenates blocks per rowId. Peak memory is one tile + one block
-    column, never the full product.
+    Compilation (lowering + tracing) is shared through the plan cache; the
+    returned closure re-reads ``catalog.tables`` on every call, so updated
+    table contents (same schema/shapes) flow through without a retrace.
     """
-    din, dout = w.shape
-    tile = -(-dout // n_tiles)
-    pad = tile * n_tiles - dout
-    wp = jnp.pad(w, ((0, 0), (0, pad)))
-    tiles = wp.reshape(din, n_tiles, tile).transpose(1, 0, 2)  # [T, din, tile]
-    x = t[x_col]
-
-    def scan_tile(_, wt):
-        # one-tile relation, crossJoin with T (trivially T rows), project
-        one = Table.from_columns({"tile": wt.reshape(1, -1)})
-        pairs = ops.cross_join(Table.from_columns({x_col: x}), one)
-        wt_full = pairs["tile"].reshape(-1, din, tile)
-        yblock = jnp.einsum("nd,ndk->nk", pairs[x_col], wt_full)
-        return _, yblock
-
-    _, blocks = jax.lax.scan(scan_tile, 0, tiles)      # [T, N, tile]
-    out = blocks.transpose(1, 0, 2).reshape(t.capacity, n_tiles * tile)
-    return out[:, :dout]
-
-
-def forest_fused(x: jax.Array, fn, backend: str) -> jax.Array:
-    atom = fn.graph.nodes[0].atom
-    if backend == "pallas":
-        from repro.kernels.decision_forest import ops as df_ops
-        p = atom.params
-        return df_ops.forest_predict(x, jnp.asarray(p["feat"]),
-                                     jnp.asarray(p["thresh"]),
-                                     jnp.asarray(p["leaf"]))
-    return atom.apply(x)
-
-
-def forest_relational(t: Table, x_col: str, fn) -> jax.Array:
-    """crossJoin(T, DF) -> project t.predict(x) -> aggregate mean by row.
-
-    Streamed one tree at a time (buffer-pool scan over the DF relation):
-    each step joins T with a single-tree relation, projects the per-pair
-    prediction, and the running aggregate accumulates the vote.
-    """
-    p = fn.graph.nodes[0].atom.params
-    feat = jnp.asarray(p["feat"])
-    thresh = jnp.asarray(p["thresh"])
-    leaf = jnp.asarray(p["leaf"])
-    depth = int(p["depth"])
-    n_trees = feat.shape[0]
-    x = t[x_col]
-
-    def scan_tree(acc, tree):
-        f, th, lv = tree
-        one = Table.from_columns({"feat": f[None], "thresh": th[None], "leaf": lv[None]})
-        pairs = ops.cross_join(Table.from_columns({x_col: x}), one)
-        xp, fp, tp, lp = pairs[x_col], pairs["feat"], pairs["thresh"], pairs["leaf"]
-        node = jnp.zeros((xp.shape[0],), jnp.int32)
-        for _ in range(depth):
-            fi = jnp.take_along_axis(fp, node[:, None], axis=1)[:, 0]
-            ti = jnp.take_along_axis(tp, node[:, None], axis=1)[:, 0]
-            xv = jnp.take_along_axis(xp, fi[:, None], axis=1)[:, 0]
-            node = 2 * node + 1 + (xv > ti).astype(jnp.int32)
-        leaf_idx = node - (2 ** depth - 1)
-        pred = jnp.take_along_axis(lp, leaf_idx[:, None], axis=1)[:, 0]
-        return acc + pred, None
-
-    acc, _ = jax.lax.scan(scan_tree, jnp.zeros((x.shape[0],), jnp.float32),
-                          (feat, thresh, leaf))
-    return acc / n_trees
+    cache = cache or GLOBAL_PLAN_CACHE
+    run = cache.get_or_compile(plan, catalog)
+    return lambda: run(dict(catalog.tables))
 
 
 # ---------------------------------------------------------------------------
-# plan execution
+# reference interpreter (logical tree, one dispatch per node)
 # ---------------------------------------------------------------------------
 
 def execute_node(node: ir.RelNode, catalog_tables: Dict[str, Table],
-                 registry: Registry) -> Table:
+                 registry: Registry,
+                 phys: Optional[Mapping[str, ir.PhysConfig]] = None) -> Table:
+    phys = phys or {}
     if isinstance(node, ir.Scan):
         return catalog_tables[node.table]
     if isinstance(node, ir.Filter):
-        t = execute_node(node.child, catalog_tables, registry)
-        mask = eval_expr(node.pred, t, registry).astype(bool)
-        return ops.filter_(t, mask)
+        t = execute_node(node.child, catalog_tables, registry, phys)
+        mask = jnp.asarray(eval_expr(node.pred, t, registry)).astype(bool)
+        return ops.filter_(t, as_column(mask, t.capacity))
     if isinstance(node, ir.Compact):
-        t = execute_node(node.child, catalog_tables, registry)
+        t = execute_node(node.child, catalog_tables, registry, phys)
         return ops.compact(t, node.capacity)
     if isinstance(node, ir.Project):
-        t = execute_node(node.child, catalog_tables, registry)
-        new_cols = {name: eval_expr(e, t, registry) for name, e in node.outputs}
+        t = execute_node(node.child, catalog_tables, registry, phys)
+        new_cols = {name: as_column(eval_expr(e, t, registry), t.capacity)
+                    for name, e in node.outputs}
         return ops.project(t, new_cols, keep=node.keep)
     if isinstance(node, ir.Join):
-        lt = execute_node(node.left, catalog_tables, registry)
-        rt = execute_node(node.right, catalog_tables, registry)
+        lt = execute_node(node.left, catalog_tables, registry, phys)
+        rt = execute_node(node.right, catalog_tables, registry, phys)
         return ops.fk_join(lt, rt, node.left_key, node.right_key, node.rprefix)
     if isinstance(node, ir.CrossJoin):
-        lt = execute_node(node.left, catalog_tables, registry)
-        rt = execute_node(node.right, catalog_tables, registry)
+        lt = execute_node(node.left, catalog_tables, registry, phys)
+        rt = execute_node(node.right, catalog_tables, registry, phys)
         return ops.cross_join(lt, rt, node.aprefix, node.bprefix)
     if isinstance(node, ir.Aggregate):
-        t = execute_node(node.child, catalog_tables, registry)
+        t = execute_node(node.child, catalog_tables, registry, phys)
         return ops.aggregate(t, node.key, dict(node.aggs), node.num_groups)
     if isinstance(node, ir.BlockedMatmul):
-        t = execute_node(node.child, catalog_tables, registry)
-        w = _matmul_weight(registry, node.fn)
-        if node.mode == "relational":
-            y = blocked_matmul_relational(t, node.x_col, w, node.n_tiles)
+        t = execute_node(node.child, catalog_tables, registry, phys)
+        cfg = ir.resolve_phys(node, phys, registry)
+        w = ph.matmul_weight(registry, node.fn)
+        if cfg.mode == "relational":
+            y = ph.blocked_matmul_relational(t, node.x_col, w, cfg.n_tiles)
         else:
-            y = blocked_matmul_fused(t[node.x_col], w, node.n_tiles, node.backend)
+            y = ph.blocked_matmul_fused(t[node.x_col], w, cfg.n_tiles,
+                                        cfg.backend)
         return ops.project(t, {node.out_col: y}, keep=node.keep)
     if isinstance(node, ir.ForestRelational):
-        t = execute_node(node.child, catalog_tables, registry)
+        t = execute_node(node.child, catalog_tables, registry, phys)
+        cfg = ir.resolve_phys(node, phys, registry)
         fn = registry.get(node.fn)
-        if node.mode == "relational":
-            y = forest_relational(t, node.x_col, fn)
+        if cfg.mode == "relational":
+            y = ph.forest_relational(t, node.x_col, fn)
         else:
-            y = forest_fused(t[node.x_col], fn, node.backend)
+            y = ph.forest_fused(t[node.x_col], fn, cfg.backend)
         return ops.project(t, {node.out_col: y}, keep=node.keep)
     raise TypeError(type(node))
 
 
-def execute(plan: ir.Plan, catalog: ir.Catalog) -> Table:
-    return execute_node(plan.root, catalog.tables, plan.registry)
-
-
-def compile_plan(plan: ir.Plan, catalog: ir.Catalog):
-    """Returns a jitted zero-arg callable closing over catalog tables."""
-    tables = dict(catalog.tables)
-
-    @jax.jit
-    def run():
-        return execute_node(plan.root, tables, plan.registry)
-
-    return run
+def execute_reference(plan: ir.Plan, catalog: ir.Catalog) -> Table:
+    return execute_node(plan.root, catalog.tables, plan.registry, plan.phys)

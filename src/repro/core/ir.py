@@ -1,4 +1,4 @@
-"""Three-level Intermediate Representation (paper Sec. III).
+"""Logical Intermediate Representation (paper Sec. III).
 
 Top level    : relational operators (``RelNode`` subclasses) — each Filter /
                Project is customized by expressions that are opaque *at this
@@ -8,15 +8,23 @@ Middle level : expression trees (``Expr`` subclasses) — arithmetic, compare,
 Bottom level : ``Call`` resolves through the ML-function ``Registry`` to an
                ``MLGraph`` of atomic ML functions (repro.mlfuncs).
 
-A ``Plan`` bundles (root RelNode, Registry); a ``Catalog`` holds base tables
-and their statistics (row counts, per-column min/max/histograms — the E_h /
-E_s features of Query2Vec).
+The *physical* level (repro.core.physical) is produced from this IR by
+repro.core.lowering; logical nodes carry only semantics. Physical choices
+(realization mode, kernel backend, tile counts) live in a side table on the
+``Plan`` (``Plan.phys``), keyed by the stable ``uid`` of the annotated node,
+so optimizer rules can re-realize a sub-computation without rebuilding the
+logical tree.
+
+A ``Plan`` bundles (root RelNode, Registry, physical side table); a
+``Catalog`` holds base tables and their statistics (row counts, per-column
+min/max/histograms — the E_h / E_s features of Query2Vec).
 
 All IR nodes are immutable; rewrites build new trees with structural sharing.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Dict, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
@@ -250,27 +258,30 @@ class Compact(RelNode):
         return dataclasses.replace(self, child=children[0])
 
 
+_uid_counter = itertools.count()
+
+
+def fresh_uid() -> str:
+    """Stable identity for side-table annotations; survives with_children /
+    dataclasses.replace rewrites and is excluded from structural equality."""
+    return f"n{next(_uid_counter)}"
+
+
 @dataclasses.dataclass(frozen=True)
 class BlockedMatmul(RelNode):
-    """Physical node produced by R3-1 (tensor-relational matMul).
+    """Logical node produced by R3-1 (tensor-relational matMul).
 
-    Semantics: out_col[i] = x_col[i] @ W, where W is the weight of the
-    (matmul-only) registered function ``fn``. ``mode``:
-      'relational' — literally builds the tile relation W(colId, tile),
-                     cross-joins, projects per-pair blocks, and assembles
-                     (paper Fig. 2);
-      'fused'      — blocked matmul without materializing the product
-                     (Velox-style pipelined execution of the same plan);
-                     backend 'pallas' uses the block_matmul kernel.
+    Semantics only: out_col[i] = x_col[i] @ W, where W is the weight of the
+    (matmul-only) registered function ``fn``. The physical realization
+    (relational vs fused pipeline, jnp vs pallas backend, tile count) is an
+    annotation in ``Plan.phys`` keyed by ``uid`` and is chosen at lowering.
     """
     child: RelNode
     x_col: str
     out_col: str
     fn: str
-    n_tiles: int
-    mode: str = "fused"  # 'relational' | 'fused'
-    backend: str = "jnp"  # 'jnp' | 'pallas'
     keep: Optional[Tuple[str, ...]] = None
+    uid: str = dataclasses.field(default_factory=fresh_uid, compare=False)
 
     def children(self):
         return (self.child,)
@@ -281,25 +292,75 @@ class BlockedMatmul(RelNode):
 
 @dataclasses.dataclass(frozen=True)
 class ForestRelational(RelNode):
-    """Physical node produced by R3-2 (forest → crossJoin+project+aggregate).
+    """Logical node produced by R3-2 (forest → crossJoin+project+aggregate).
 
-    'relational' mode cross-joins the input with the tree relation
-    DF(treeId, feat, thresh, leaf), projects per-(row, tree) predictions, and
-    aggregates the vote by row; 'fused' evaluates the whole ensemble per row.
+    Semantics only: out_col[i] = forest_vote(x_col[i]). Whether the forest is
+    realized relationally (crossJoin with the tree relation DF(treeId, feat,
+    thresh, leaf) + aggregate) or fused per row, and on which backend, is a
+    ``Plan.phys`` annotation keyed by ``uid``.
     """
     child: RelNode
     x_col: str
     out_col: str
     fn: str
-    mode: str = "fused"
-    backend: str = "jnp"
     keep: Optional[Tuple[str, ...]] = None
+    uid: str = dataclasses.field(default_factory=fresh_uid, compare=False)
 
     def children(self):
         return (self.child,)
 
     def with_children(self, children):
         return dataclasses.replace(self, child=children[0])
+
+
+# ===========================================================================
+# Physical configuration side table (annotations on Plan, consumed by
+# repro.core.lowering — see DESIGN notes in that module)
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class PhysConfig:
+    """Physical realization choice for one BlockedMatmul/ForestRelational.
+
+    mode    : 'relational' — literal tile/tree relation + crossJoin pipeline
+              (paper Fig. 2); 'fused' — pipelined evaluation without
+              materializing the product (Velox-style).
+    backend : 'jnp' | 'pallas' (TPU kernels).
+    n_tiles : weight-tile count for BlockedMatmul streaming.
+    """
+    mode: str = "fused"
+    backend: str = "jnp"
+    n_tiles: int = 4
+
+    def signature(self) -> str:
+        return f"{self.mode}/{self.backend}/{self.n_tiles}"
+
+
+DEFAULT_PHYS = PhysConfig()
+
+
+def default_n_tiles(registry: Registry, fn_name: str) -> int:
+    """Tile-count policy for a blocked matmul: ~1MB per weight tile, clamped
+    to [2, 16]. The single source of truth — R3-1 annotations, lowering
+    defaults, the cost model, and the featurizer all resolve through here."""
+    try:
+        fn = registry.get(fn_name)
+        w = np.asarray(fn.graph.nodes[0].atom.params["w"])
+        return int(max(2, min(16, np.ceil(w.nbytes / (1 << 20)))))
+    except Exception:
+        return DEFAULT_PHYS.n_tiles
+
+
+def resolve_phys(node: RelNode, phys: Optional[Mapping[str, PhysConfig]],
+                 registry: Registry) -> PhysConfig:
+    """The PhysConfig a node will actually execute with: its side-table
+    annotation, or the default with a weight-derived tile count."""
+    uid = getattr(node, "uid", "")
+    cfg = (phys or {}).get(uid, DEFAULT_PHYS)
+    if isinstance(node, BlockedMatmul) and uid not in (phys or {}):
+        cfg = dataclasses.replace(cfg,
+                                  n_tiles=default_n_tiles(registry, node.fn))
+    return cfg
 
 
 # ===========================================================================
@@ -360,9 +421,22 @@ class Catalog:
 class Plan:
     root: RelNode
     registry: Registry
+    # physical side table: node uid -> PhysConfig (logical tree stays pure)
+    phys: Mapping[str, PhysConfig] = dataclasses.field(default_factory=dict)
 
     def replace_root(self, root: RelNode) -> "Plan":
-        return Plan(root=root, registry=self.registry)
+        return Plan(root=root, registry=self.registry, phys=self.phys)
+
+    def with_phys(self, uid: str, cfg: PhysConfig) -> "Plan":
+        return Plan(root=self.root, registry=self.registry,
+                    phys={**self.phys, uid: cfg})
+
+    def phys_for(self, node: RelNode) -> PhysConfig:
+        return resolve_phys(node, self.phys, self.registry)
+
+    def signature(self) -> str:
+        """Structural + physical-config signature (plan cache / embed keys)."""
+        return plan_signature(self.root, self.phys)
 
 
 # ===========================================================================
@@ -555,31 +629,38 @@ def replace_node(root: RelNode, old: RelNode, new: RelNode) -> RelNode:
     return root.with_children(new_kids)
 
 
-def plan_signature(node: RelNode) -> str:
-    """Structural string (used for dedup in search)."""
+def plan_signature(node: RelNode,
+                   phys: Optional[Mapping[str, PhysConfig]] = None) -> str:
+    """Structural string (used for dedup in search and as cache keys).
+
+    With ``phys`` given, BlockedMatmul/ForestRelational signatures include
+    their physical-config annotation so plans that differ only in realization
+    (the R4-2 choices) key distinctly.
+    """
     if isinstance(node, Scan):
         return f"S({node.table})"
     if isinstance(node, Filter):
-        return f"F({_expr_sig(node.pred)},{plan_signature(node.child)})"
+        return f"F({_expr_sig(node.pred)},{plan_signature(node.child, phys)})"
     if isinstance(node, Compact):
-        return f"C({node.capacity},{plan_signature(node.child)})"
+        return f"C({node.capacity},{plan_signature(node.child, phys)})"
     if isinstance(node, Project):
         outs = ",".join(f"{n}={_expr_sig(e)}" for n, e in node.outputs)
-        return f"P({outs};{node.keep};{plan_signature(node.child)})"
+        return f"P({outs};{node.keep};{plan_signature(node.child, phys)})"
     if isinstance(node, Join):
-        return (f"J({node.left_key}={node.right_key},{plan_signature(node.left)},"
-                f"{plan_signature(node.right)})")
+        return (f"J({node.left_key}={node.right_key},"
+                f"{plan_signature(node.left, phys)},"
+                f"{plan_signature(node.right, phys)})")
     if isinstance(node, CrossJoin):
-        return f"X({plan_signature(node.left)},{plan_signature(node.right)})"
+        return (f"X({plan_signature(node.left, phys)},"
+                f"{plan_signature(node.right, phys)})")
     if isinstance(node, Aggregate):
         aggs = ",".join(f"{o}={k}:{c}" for o, (k, c) in node.aggs)
-        return f"A({node.key};{aggs};{plan_signature(node.child)})"
-    if isinstance(node, BlockedMatmul):
-        return (f"BM({node.x_col}->{node.out_col},{node.fn},{node.n_tiles},"
-                f"{node.mode},{node.backend},{plan_signature(node.child)})")
-    if isinstance(node, ForestRelational):
-        return (f"FR({node.x_col}->{node.out_col},{node.fn},{node.mode},"
-                f"{node.backend},{plan_signature(node.child)})")
+        return f"A({node.key};{aggs};{plan_signature(node.child, phys)})"
+    if isinstance(node, (BlockedMatmul, ForestRelational)):
+        cfg = (phys or {}).get(node.uid, DEFAULT_PHYS)
+        tag = "BM" if isinstance(node, BlockedMatmul) else "FR"
+        return (f"{tag}({node.x_col}->{node.out_col},{node.fn},"
+                f"{cfg.signature()},{plan_signature(node.child, phys)})")
     raise TypeError(type(node))
 
 

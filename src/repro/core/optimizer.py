@@ -15,8 +15,11 @@ import numpy as np
 from repro.core import embedding as E
 from repro.core import ir, wl
 from repro.core.cost import CPU_PROFILE
+from repro.core.plan_cache import LRUCache
 from repro.core.planner import analytic_cost_fn
 from repro.train.optim import AdamW
+
+EMBED_CACHE_SIZE = 4096  # embeddings are ~1.5KB; cap the store at a few MB
 
 
 @dataclasses.dataclass
@@ -27,18 +30,24 @@ class QueryEmbedder:
     latency_head: Dict
     one_model: bool = False    # Sec. V-E baseline: joint training
 
-    _cache: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    # LRU-bounded; mirrors the PlanCache interface (stats.hits/misses)
+    _cache: LRUCache = dataclasses.field(
+        default_factory=lambda: LRUCache(EMBED_CACHE_SIZE))
+
+    @property
+    def cache_stats(self):
+        return self._cache.stats
 
     # -- embedding ----------------------------------------------------------
     def embed(self, plan: ir.Plan, catalog: ir.Catalog) -> np.ndarray:
-        key = ir.plan_signature(plan.root)
+        key = plan.signature()
         hit = self._cache.get(key)
         if hit is not None:
             return hit
         pf = E.featurize_plan(plan, catalog)
         emb = np.asarray(E.query2vec_apply(self.q2v, self.m2v,
                                            E.pf_to_arrays(pf)))
-        self._cache[key] = emb
+        self._cache.put(key, emb)
         return emb
 
     def embed_expr(self, graph) -> np.ndarray:
@@ -137,7 +146,7 @@ def _plan_batch_arrays(plans_feats: List[E.PlanFeatures]):
 def train_query2vec(embedder: QueryEmbedder, plans, catalogs, steps: int = 200,
                     batch: int = 12, seed: int = 0, lr: float = 3e-4) -> Dict:
     """Task-1 contrastive training for Query2Vec over sampled queries."""
-    feats = [wl.plan_wl(p.root, p.registry) for p in plans]
+    feats = [wl.plan_wl(p.root, p.registry, phys=p.phys) for p in plans]
     triples = mine_triples(plans, feats, n_triples=max(steps * batch, 256),
                            seed=seed)
     pfs = [E.featurize_plan(p, c) for p, c in zip(plans, catalogs)]

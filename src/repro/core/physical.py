@@ -1,0 +1,354 @@
+"""Physical plan layer: operators the backend actually runs.
+
+Produced from the logical IR by ``repro.core.lowering.lower``; executed by
+``run`` below. Physical nodes are where realization choices live — the
+logical tree never carries mode/backend/tile decisions (those are ``ir.Plan``
+side-table annotations consumed at lowering time).
+
+Operators:
+  PScan            — catalog table lookup.
+  PPipeline        — a fused chain of row-local stages (Filter / Project /
+                     Compact), executed one table pass per stage without
+                     per-node interpreter dispatch (Velox-style driver).
+  PJoin/PCrossJoin — relational joins (repro.relational.ops).
+  PAggregate       — group-by.
+  PBlockedMatmul   — R3-1 realization: 'relational' streams the weight-tile
+                     relation (paper Fig. 2); 'fused' is the pipelined blocked
+                     matmul; backend 'pallas' uses the TPU kernel.
+  PForestRelational— R3-2 realization: 'relational' streams the tree relation;
+                     'fused' evaluates the ensemble per row.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ir
+from repro.core.evaluator import as_column, eval_expr
+from repro.mlfuncs.registry import Registry
+from repro.relational import ops
+from repro.relational.table import Table
+
+
+# ---------------------------------------------------------------------------
+# pipeline stages (row-local, fusable)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FilterStage:
+    pred: ir.Expr
+
+    def signature(self) -> str:
+        return f"f[{ir._expr_sig(self.pred)}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class ProjectStage:
+    outputs: Tuple[Tuple[str, ir.Expr], ...]
+    keep: Optional[Tuple[str, ...]] = None
+
+    def signature(self) -> str:
+        outs = ",".join(f"{n}={ir._expr_sig(e)}" for n, e in self.outputs)
+        return f"p[{outs};{self.keep}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactStage:
+    capacity: int
+
+    def signature(self) -> str:
+        return f"c[{self.capacity}]"
+
+
+Stage = Union[FilterStage, ProjectStage, CompactStage]
+
+
+# ---------------------------------------------------------------------------
+# physical operators
+# ---------------------------------------------------------------------------
+
+class PhysNode:
+    def children(self) -> Tuple["PhysNode", ...]:
+        return ()
+
+
+@dataclasses.dataclass(frozen=True)
+class PScan(PhysNode):
+    table: str
+
+
+@dataclasses.dataclass(frozen=True)
+class PPipeline(PhysNode):
+    child: PhysNode
+    stages: Tuple[Stage, ...]
+
+    def children(self):
+        return (self.child,)
+
+
+@dataclasses.dataclass(frozen=True)
+class PJoin(PhysNode):
+    left: PhysNode
+    right: PhysNode
+    left_key: str
+    right_key: str
+    rprefix: str = ""
+
+    def children(self):
+        return (self.left, self.right)
+
+
+@dataclasses.dataclass(frozen=True)
+class PCrossJoin(PhysNode):
+    left: PhysNode
+    right: PhysNode
+    aprefix: str = ""
+    bprefix: str = ""
+
+    def children(self):
+        return (self.left, self.right)
+
+
+@dataclasses.dataclass(frozen=True)
+class PAggregate(PhysNode):
+    child: PhysNode
+    key: str
+    aggs: Tuple[Tuple[str, Tuple[str, str]], ...]
+    num_groups: int
+
+    def children(self):
+        return (self.child,)
+
+
+@dataclasses.dataclass(frozen=True)
+class PBlockedMatmul(PhysNode):
+    child: PhysNode
+    x_col: str
+    out_col: str
+    fn: str
+    n_tiles: int
+    mode: str          # 'relational' | 'fused'
+    backend: str       # 'jnp' | 'pallas'
+    keep: Optional[Tuple[str, ...]] = None
+
+    def children(self):
+        return (self.child,)
+
+
+@dataclasses.dataclass(frozen=True)
+class PForestRelational(PhysNode):
+    child: PhysNode
+    x_col: str
+    out_col: str
+    fn: str
+    mode: str
+    backend: str
+    keep: Optional[Tuple[str, ...]] = None
+
+    def children(self):
+        return (self.child,)
+
+
+@dataclasses.dataclass(frozen=True)
+class PhysicalPlan:
+    root: PhysNode
+    registry: Registry
+
+    def signature(self) -> str:
+        return phys_signature(self.root)
+
+
+def phys_signature(node: PhysNode) -> str:
+    if isinstance(node, PScan):
+        return f"S({node.table})"
+    if isinstance(node, PPipeline):
+        stages = "|".join(s.signature() for s in node.stages)
+        return f"PIPE({stages};{phys_signature(node.child)})"
+    if isinstance(node, PJoin):
+        return (f"J({node.left_key}={node.right_key},"
+                f"{phys_signature(node.left)},{phys_signature(node.right)})")
+    if isinstance(node, PCrossJoin):
+        return f"X({phys_signature(node.left)},{phys_signature(node.right)})"
+    if isinstance(node, PAggregate):
+        aggs = ",".join(f"{o}={k}:{c}" for o, (k, c) in node.aggs)
+        return f"A({node.key};{aggs};{phys_signature(node.child)})"
+    if isinstance(node, PBlockedMatmul):
+        return (f"BM({node.x_col}->{node.out_col},{node.fn},{node.n_tiles},"
+                f"{node.mode},{node.backend},{phys_signature(node.child)})")
+    if isinstance(node, PForestRelational):
+        return (f"FR({node.x_col}->{node.out_col},{node.fn},{node.mode},"
+                f"{node.backend},{phys_signature(node.child)})")
+    raise TypeError(type(node))
+
+
+# ---------------------------------------------------------------------------
+# realizations of R3-1 / R3-2
+# ---------------------------------------------------------------------------
+
+def matmul_weight(registry: Registry, fn_name: str):
+    fn = registry.get(fn_name)
+    assert fn.graph is not None and len(fn.graph.nodes) == 1
+    atom = fn.graph.nodes[0].atom
+    assert atom.kind == "matmul", f"{fn_name} is not a pure matmul"
+    return jnp.asarray(atom.params["w"])
+
+
+def blocked_matmul_fused(x: jax.Array, w: jax.Array, n_tiles: int,
+                         backend: str) -> jax.Array:
+    """Pipelined tile-at-a-time matmul over column blocks of w."""
+    if backend == "pallas":
+        from repro.kernels.block_matmul import ops as bm_ops
+        return bm_ops.block_matmul(x, w, n_tiles)
+    dout = w.shape[1]
+    tile = -(-dout // n_tiles)  # ceil
+    pad = tile * n_tiles - dout
+    wp = jnp.pad(w, ((0, 0), (0, pad)))
+    tiles = wp.reshape(w.shape[0], n_tiles, tile).transpose(1, 0, 2)  # [T, din, tile]
+
+    def body(carry, wt):
+        return carry, x @ wt
+
+    _, blocks = jax.lax.scan(body, 0, tiles)  # [T, N, tile]
+    out = blocks.transpose(1, 0, 2).reshape(x.shape[0], n_tiles * tile)
+    return out[:, :dout]
+
+
+def blocked_matmul_relational(t: Table, x_col: str, w: jax.Array,
+                              n_tiles: int) -> jax.Array:
+    """Literal tensor-relational pipeline (paper Fig. 2):
+    tile relation W(colId, tile) -> crossJoin -> project -> assemble.
+
+    The crossJoin is *streamed* one tile at a time (the paper's buffer-pool
+    scan / Velox pipelining): each scan step joins T with a single-tile
+    relation, projects the per-pair block, and emits it; assembly
+    concatenates blocks per rowId. Peak memory is one tile + one block
+    column, never the full product.
+    """
+    din, dout = w.shape
+    tile = -(-dout // n_tiles)
+    pad = tile * n_tiles - dout
+    wp = jnp.pad(w, ((0, 0), (0, pad)))
+    tiles = wp.reshape(din, n_tiles, tile).transpose(1, 0, 2)  # [T, din, tile]
+    x = t[x_col]
+
+    def scan_tile(_, wt):
+        # one-tile relation, crossJoin with T (trivially T rows), project
+        one = Table.from_columns({"tile": wt.reshape(1, -1)})
+        pairs = ops.cross_join(Table.from_columns({x_col: x}), one)
+        wt_full = pairs["tile"].reshape(-1, din, tile)
+        yblock = jnp.einsum("nd,ndk->nk", pairs[x_col], wt_full)
+        return _, yblock
+
+    _, blocks = jax.lax.scan(scan_tile, 0, tiles)      # [T, N, tile]
+    out = blocks.transpose(1, 0, 2).reshape(t.capacity, n_tiles * tile)
+    return out[:, :dout]
+
+
+def forest_fused(x: jax.Array, fn, backend: str) -> jax.Array:
+    atom = fn.graph.nodes[0].atom
+    if backend == "pallas":
+        from repro.kernels.decision_forest import ops as df_ops
+        p = atom.params
+        return df_ops.forest_predict(x, jnp.asarray(p["feat"]),
+                                     jnp.asarray(p["thresh"]),
+                                     jnp.asarray(p["leaf"]))
+    return atom.apply(x)
+
+
+def forest_relational(t: Table, x_col: str, fn) -> jax.Array:
+    """crossJoin(T, DF) -> project t.predict(x) -> aggregate mean by row.
+
+    Streamed one tree at a time (buffer-pool scan over the DF relation):
+    each step joins T with a single-tree relation, projects the per-pair
+    prediction, and the running aggregate accumulates the vote.
+    """
+    p = fn.graph.nodes[0].atom.params
+    feat = jnp.asarray(p["feat"])
+    thresh = jnp.asarray(p["thresh"])
+    leaf = jnp.asarray(p["leaf"])
+    depth = int(p["depth"])
+    n_trees = feat.shape[0]
+    x = t[x_col]
+
+    def scan_tree(acc, tree):
+        f, th, lv = tree
+        one = Table.from_columns({"feat": f[None], "thresh": th[None], "leaf": lv[None]})
+        pairs = ops.cross_join(Table.from_columns({x_col: x}), one)
+        xp, fp, tp, lp = pairs[x_col], pairs["feat"], pairs["thresh"], pairs["leaf"]
+        node = jnp.zeros((xp.shape[0],), jnp.int32)
+        for _ in range(depth):
+            fi = jnp.take_along_axis(fp, node[:, None], axis=1)[:, 0]
+            ti = jnp.take_along_axis(tp, node[:, None], axis=1)[:, 0]
+            xv = jnp.take_along_axis(xp, fi[:, None], axis=1)[:, 0]
+            node = 2 * node + 1 + (xv > ti).astype(jnp.int32)
+        leaf_idx = node - (2 ** depth - 1)
+        pred = jnp.take_along_axis(lp, leaf_idx[:, None], axis=1)[:, 0]
+        return acc + pred, None
+
+    acc, _ = jax.lax.scan(scan_tree, jnp.zeros((x.shape[0],), jnp.float32),
+                          (feat, thresh, leaf))
+    return acc / n_trees
+
+
+# ---------------------------------------------------------------------------
+# physical execution
+# ---------------------------------------------------------------------------
+
+def _run_stage(stage: Stage, t: Table, registry: Registry) -> Table:
+    if isinstance(stage, FilterStage):
+        mask = jnp.asarray(eval_expr(stage.pred, t, registry)).astype(bool)
+        mask = as_column(mask, t.capacity)
+        return ops.filter_(t, mask)
+    if isinstance(stage, ProjectStage):
+        new_cols = {name: as_column(eval_expr(e, t, registry), t.capacity)
+                    for name, e in stage.outputs}
+        return ops.project(t, new_cols, keep=stage.keep)
+    if isinstance(stage, CompactStage):
+        return ops.compact(t, stage.capacity)
+    raise TypeError(type(stage))
+
+
+def run_node(node: PhysNode, tables: Dict[str, Table],
+             registry: Registry) -> Table:
+    if isinstance(node, PScan):
+        return tables[node.table]
+    if isinstance(node, PPipeline):
+        t = run_node(node.child, tables, registry)
+        for stage in node.stages:
+            t = _run_stage(stage, t, registry)
+        return t
+    if isinstance(node, PJoin):
+        lt = run_node(node.left, tables, registry)
+        rt = run_node(node.right, tables, registry)
+        return ops.fk_join(lt, rt, node.left_key, node.right_key, node.rprefix)
+    if isinstance(node, PCrossJoin):
+        lt = run_node(node.left, tables, registry)
+        rt = run_node(node.right, tables, registry)
+        return ops.cross_join(lt, rt, node.aprefix, node.bprefix)
+    if isinstance(node, PAggregate):
+        t = run_node(node.child, tables, registry)
+        return ops.aggregate(t, node.key, dict(node.aggs), node.num_groups)
+    if isinstance(node, PBlockedMatmul):
+        t = run_node(node.child, tables, registry)
+        w = matmul_weight(registry, node.fn)
+        if node.mode == "relational":
+            y = blocked_matmul_relational(t, node.x_col, w, node.n_tiles)
+        else:
+            y = blocked_matmul_fused(t[node.x_col], w, node.n_tiles, node.backend)
+        return ops.project(t, {node.out_col: y}, keep=node.keep)
+    if isinstance(node, PForestRelational):
+        t = run_node(node.child, tables, registry)
+        fn = registry.get(node.fn)
+        if node.mode == "relational":
+            y = forest_relational(t, node.x_col, fn)
+        else:
+            y = forest_fused(t[node.x_col], fn, node.backend)
+        return ops.project(t, {node.out_col: y}, keep=node.keep)
+    raise TypeError(type(node))
+
+
+def run(pplan: PhysicalPlan, tables: Dict[str, Table]) -> Table:
+    return run_node(pplan.root, tables, pplan.registry)

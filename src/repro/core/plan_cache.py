@@ -1,0 +1,176 @@
+"""Compiled-plan cache: skip lowering AND jax tracing for repeated queries.
+
+``PlanCache.get_or_compile(plan, catalog)`` returns a jitted callable
+``run(tables) -> Table`` keyed by the plan's structural+physical signature
+plus the catalog's schema signature (table/column names, dtypes, static
+shapes — anything that would force a retrace). Two structurally identical
+plans over same-shaped catalogs share one compiled executable; fresh table
+*contents* flow through as arguments, so parameterized / repeated query
+traffic pays tracing exactly once. Referenced ML functions contribute their
+name + architecture (atom kinds, parameter shapes/dtypes) to the key; weight
+*values* are assumed stable per name (model-registry contract) — an in-place
+weight update that keeps name and shapes needs a fresh name or cache.
+
+``LRUCache`` + ``CacheStats`` are the shared bounded-cache machinery (also
+used to bound the QueryEmbedder's embedding cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Callable, Dict, Hashable, Optional
+
+import jax
+
+from repro.core import ir
+from repro.core.lowering import lower
+from repro.core import physical as ph
+from repro.relational.table import Table
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "hit_rate": self.hit_rate}
+
+
+class LRUCache:
+    """Size-capped mapping with LRU eviction and hit/miss accounting."""
+
+    def __init__(self, maxsize: int = 128):
+        self.maxsize = max(1, int(maxsize))
+        self._data: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self.stats = CacheStats()
+
+    def get(self, key: Hashable, default=None):
+        if key in self._data:
+            self._data.move_to_end(key)
+            self.stats.hits += 1
+            return self._data[key]
+        self.stats.misses += 1
+        return default
+
+    def put(self, key: Hashable, value) -> None:
+        if key in self._data:
+            self._data.move_to_end(key)
+        self._data[key] = value
+        while len(self._data) > self.maxsize:
+            self._data.popitem(last=False)
+            self.stats.evictions += 1
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._data
+
+    def clear(self) -> None:
+        self._data.clear()
+
+
+def schema_signature(catalog: ir.Catalog) -> str:
+    """Static catalog shape: anything that changes the traced program."""
+    parts = []
+    for name in sorted(catalog.tables):
+        t = catalog.tables[name]
+        cols = ",".join(f"{c}:{t.columns[c].dtype}:{t.columns[c].shape}"
+                        for c in sorted(t.columns))
+        parts.append(f"{name}[{t.capacity}]({cols})")
+    return ";".join(parts)
+
+
+def _plan_fn_names(plan: ir.Plan):
+    names = set()
+
+    def from_expr(e: ir.Expr):
+        if isinstance(e, ir.Call):
+            names.add(e.fn)
+        for c in e.children():
+            from_expr(c)
+
+    for node in ir.walk(plan.root):
+        if isinstance(node, ir.Filter):
+            from_expr(node.pred)
+        elif isinstance(node, ir.Project):
+            for _, e in node.outputs:
+                from_expr(e)
+        elif isinstance(node, (ir.BlockedMatmul, ir.ForestRelational)):
+            names.add(node.fn)
+    return sorted(names)
+
+
+def registry_signature(plan: ir.Plan) -> str:
+    """Architecture signature of every ML function the plan references:
+    atom kinds + parameter shapes/dtypes (cheap — no weight hashing). Guards
+    the name-identity assumption against same-named functions with different
+    architectures; a weight update that keeps name AND shapes must bump the
+    function name (or use a fresh cache) to invalidate."""
+    parts = []
+    for name in _plan_fn_names(plan):
+        try:
+            fn = plan.registry.get(name)
+        except KeyError:
+            parts.append(f"{name}:?")
+            continue
+        if fn.graph is None:
+            parts.append(f"{name}:opaque")
+            continue
+        atoms = []
+        for n in fn.graph.nodes:
+            ps = ",".join(
+                f"{k}={getattr(v, 'shape', v)}:{getattr(v, 'dtype', '')}"
+                for k, v in sorted(n.atom.params.items()))
+            atoms.append(f"{n.atom.kind}({ps})@{n.atom.backend}")
+        parts.append(f"{name}:{'|'.join(atoms)}")
+    return ";".join(parts)
+
+
+class PlanCache:
+    """Signature-keyed cache of compiled (jitted) plan executables."""
+
+    def __init__(self, maxsize: int = 64):
+        self._cache = LRUCache(maxsize)
+        self.traces = 0  # times jax actually (re)traced a cached executable
+
+    @property
+    def stats(self) -> CacheStats:
+        return self._cache.stats
+
+    def key(self, plan: ir.Plan, catalog: ir.Catalog) -> str:
+        return (plan.signature() + "@" + schema_signature(catalog)
+                + "@" + registry_signature(plan))
+
+    def get_or_compile(self, plan: ir.Plan, catalog: ir.Catalog,
+                       *, backend: Optional[str] = None
+                       ) -> Callable[[Dict[str, Table]], Table]:
+        key = self.key(plan, catalog)
+        if backend is not None:
+            key = f"{key}#be={backend}"
+        fn = self._cache.get(key)
+        if fn is None:
+            pplan = lower(plan, catalog, backend=backend)
+
+            def traced(tables: Dict[str, Table]) -> Table:
+                self.traces += 1  # python side effect: runs only while tracing
+                return ph.run(pplan, tables)
+
+            fn = jax.jit(traced)
+            self._cache.put(key, fn)
+        return fn
+
+    def __call__(self, plan: ir.Plan, catalog: ir.Catalog) -> Table:
+        """Convenience: compile-or-reuse, then execute on catalog tables."""
+        return self.get_or_compile(plan, catalog)(dict(catalog.tables))
+
+
+GLOBAL_PLAN_CACHE = PlanCache()

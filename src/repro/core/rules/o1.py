@@ -11,7 +11,7 @@ from typing import List
 
 import numpy as np
 
-from repro.core import ir, np_eval
+from repro.core import evaluator, ir
 from repro.core.rules import base
 from repro.core.rules.base import Rule, RuleConfig, register_rule
 
@@ -297,10 +297,10 @@ class CompactAfterFilter(Rule):
         return out
 
     def _row_bound(self, f: ir.Filter, plan, catalog):
-        if isinstance(f.child, ir.Scan) and not np_eval.has_call(f.pred):
+        if isinstance(f.child, ir.Scan) and not evaluator.has_call(f.pred):
             npt = catalog.np_tables[f.child.table]
             if npt:
-                mask = np_eval.eval_np(f.pred, npt)
+                mask = evaluator.eval_expr(f.pred, npt, plan.registry, xp=np)
                 return int(np.sum(mask))
         key = (id(catalog), ir.plan_signature(f))
         if key in self._count_cache:
@@ -308,9 +308,9 @@ class CompactAfterFilter(Rule):
         ci = ir.infer(f.child, plan.registry, catalog)
         if ci.capacity > 2_000_000:  # too big to count eagerly
             return None
-        from repro.core.executor import execute_node
+        from repro.core import executor
         try:
-            t = execute_node(f, catalog.tables, plan.registry)
+            t = executor.execute(ir.Plan(f, plan.registry, plan.phys), catalog)
             bound = int(t.num_valid())
         except Exception:
             bound = None

@@ -112,7 +112,7 @@ class FactorizeLinear(Rule):
                      for n2, e2 in proj.outputs)
         new_proj = dataclasses.replace(proj, outputs=outs)
         root = base.replace_at(plan.root, cfg.get("path"), new_proj)
-        return ir.Plan(root, registry)
+        return ir.Plan(root, registry, plan.phys)
 
 
 @register_rule
@@ -174,7 +174,7 @@ class FactorizeDistance(Rule):
                      for n2, e2 in proj.outputs)
         root = base.replace_at(plan.root, cfg.get("path"),
                                dataclasses.replace(proj, outputs=outs))
-        return ir.Plan(root, registry)
+        return ir.Plan(root, registry, plan.phys)
 
 
 def _prune_unused(g: MLGraph) -> MLGraph:

@@ -73,7 +73,6 @@ class TensorRelationalMatmul(Rule):
         fn = registry.get(cfg.get("fn"))
         pre, mm_node, post = _chain_split(fn.graph, cfg.get("idx"))
         w = np.asarray(mm_node.atom.params["w"])
-        n_tiles = int(max(2, min(16, np.ceil(w.nbytes / (1 << 20)))))
         mm_name = registry.fresh_name(fn.name + "_mm")
         registry.replace(MLFunction(
             name=mm_name,
@@ -97,10 +96,14 @@ class TensorRelationalMatmul(Rule):
                 registry.replace(MLFunction(name=pre_name, graph=pre, n_inputs=1))
                 stage_expr = ir.Call(pre_name, (arg,))
             stage = ir.Project(child, outputs=((x_col, stage_expr),), keep=None)
-        # stage 2: the tensor-relational matmul
+        # stage 2: the tensor-relational matmul (physical realization is a
+        # side-table annotation, not a logical-node field)
         y_col = fresh_col("y")
-        bm = ir.BlockedMatmul(stage, x_col=x_col, out_col=y_col, fn=mm_name,
-                              n_tiles=n_tiles, mode="relational", backend="jnp")
+        bm = ir.BlockedMatmul(stage, x_col=x_col, out_col=y_col, fn=mm_name)
+        phys = {**plan.phys,
+                bm.uid: ir.PhysConfig(mode="relational", backend="jnp",
+                                      n_tiles=ir.default_n_tiles(registry,
+                                                                 mm_name))}
         # stage 3: post-chain + the rest of the original outputs
         if post is None:
             final_expr: ir.Expr = ir.Col(y_col)
@@ -113,7 +116,7 @@ class TensorRelationalMatmul(Rule):
         top = ir.Project(bm, outputs=rest + ((cfg.get("output"), final_expr),),
                          keep=keep)
         root = base.replace_at(plan.root, cfg.get("path"), top)
-        return ir.Plan(root, registry)
+        return ir.Plan(root, registry, phys)
 
 
 @register_rule
@@ -143,8 +146,9 @@ class ForestToRelational(Rule):
         call = dict(proj.outputs)[cfg.get("output")]
         child_schema = tuple(sorted(ir.infer(proj.child, plan.registry, catalog).schema))
         fr = ir.ForestRelational(proj.child, x_col=call.args[0].name,
-                                 out_col=cfg.get("output"), fn=cfg.get("fn"),
-                                 mode="relational", backend="jnp")
+                                 out_col=cfg.get("output"), fn=cfg.get("fn"))
+        phys = {**plan.phys,
+                fr.uid: ir.PhysConfig(mode="relational", backend="jnp")}
         rest = tuple((n2, e2) for n2, e2 in proj.outputs if n2 != cfg.get("output"))
         keep = proj.keep if proj.keep is not None else child_schema
         if rest or proj.keep is not None:
@@ -154,7 +158,7 @@ class ForestToRelational(Rule):
         else:
             top = fr
         root = base.replace_at(plan.root, cfg.get("path"), top)
-        return plan.replace_root(root)
+        return ir.Plan(root, plan.registry, phys)
 
 
 @register_rule
@@ -196,4 +200,4 @@ class CentroidsToRelational(Rule):
                      for n2, e2 in proj.outputs)
         root = base.replace_at(plan.root, cfg.get("path"),
                                dataclasses.replace(proj, outputs=outs))
-        return ir.Plan(root, registry)
+        return ir.Plan(root, registry, plan.phys)

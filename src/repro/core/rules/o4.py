@@ -94,7 +94,7 @@ class SplitDisjoint(Rule):
             keep = tuple(sorted(child_schema))
         new_proj = ir.Project(below, outputs=outs, keep=keep)
         root = base.replace_at(plan.root, cfg.get("path"), new_proj)
-        return ir.Plan(root, registry)
+        return ir.Plan(root, registry, plan.phys)
 
 
 @register_rule
@@ -152,7 +152,7 @@ class FuseDense(Rule):
         new_name = registry.fresh_name(fn.name + "_fused")
         registry.replace(dataclasses.replace(fn, name=new_name, graph=g2))
         root = _rename_call(plan.root, cfg.get("path"), cfg.get("fn"), new_name)
-        return ir.Plan(root, registry)
+        return ir.Plan(root, registry, plan.phys)
 
 
 @register_rule
@@ -194,7 +194,7 @@ class UnfuseDense(Rule):
         new_name = registry.fresh_name(fn.name + "_unfused")
         registry.replace(dataclasses.replace(fn, name=new_name, graph=g2))
         root = _rename_call(plan.root, cfg.get("path"), cfg.get("fn"), new_name)
-        return ir.Plan(root, registry)
+        return ir.Plan(root, registry, plan.phys)
 
 
 @register_rule
@@ -208,11 +208,12 @@ class BackendReplace(Rule):
         for p in base.all_paths(plan.root):
             n = base.node_at(plan.root, p)
             if isinstance(n, (ir.BlockedMatmul, ir.ForestRelational)):
+                pc = plan.phys_for(n)
                 for be in ("jnp", "pallas"):
-                    if be != n.backend:
+                    if be != pc.backend:
                         out.append(RuleConfig.make(self.name, path=p, kind="node",
                                                    backend=be))
-                if n.mode == "relational":
+                if pc.mode == "relational":
                     out.append(RuleConfig.make(self.name, path=p, kind="mode",
                                                backend="fused"))
             if isinstance(n, ir.Project):
@@ -236,12 +237,13 @@ class BackendReplace(Rule):
     def apply(self, plan, catalog, cfg):
         if cfg.get("kind") == "node":
             n = base.node_at(plan.root, cfg.get("path"))
-            new = dataclasses.replace(n, backend=cfg.get("backend"))
-            return plan.replace_root(base.replace_at(plan.root, cfg.get("path"), new))
+            new_cfg = dataclasses.replace(plan.phys_for(n),
+                                          backend=cfg.get("backend"))
+            return plan.with_phys(n.uid, new_cfg)
         if cfg.get("kind") == "mode":
             n = base.node_at(plan.root, cfg.get("path"))
-            new = dataclasses.replace(n, mode="fused")
-            return plan.replace_root(base.replace_at(plan.root, cfg.get("path"), new))
+            new_cfg = dataclasses.replace(plan.phys_for(n), mode="fused")
+            return plan.with_phys(n.uid, new_cfg)
         registry = plan.registry.copy()
         fn = registry.get(cfg.get("fn"))
         g = fn.graph
@@ -256,7 +258,7 @@ class BackendReplace(Rule):
         new_name = registry.fresh_name(fn.name + "_be")
         registry.replace(dataclasses.replace(fn, name=new_name, graph=g2))
         root = _rename_call(plan.root, cfg.get("path"), cfg.get("fn"), new_name)
-        return ir.Plan(root, registry)
+        return ir.Plan(root, registry, plan.phys)
 
 
 @register_rule

@@ -99,7 +99,10 @@ def _canon_fn(name: str) -> str:
     return name
 
 
-def plan_wl(node: ir.RelNode, registry, iters: int = 3) -> Counter:
+def plan_wl(node: ir.RelNode, registry, iters: int = 3, phys=None) -> Counter:
+    """WL features of a plan; ``phys`` (``Plan.phys``) labels physical
+    realization choices of BlockedMatmul/ForestRelational nodes."""
+    phys = phys or {}
     labels: List[str] = []
     children: List[List[int]] = []
 
@@ -121,9 +124,11 @@ def plan_wl(node: ir.RelNode, registry, iters: int = 3) -> Counter:
         elif isinstance(n, ir.Aggregate):
             lab = f"agg:{n.key}:{','.join(k for _, (k, _) in n.aggs)}"
         elif isinstance(n, ir.BlockedMatmul):
-            lab = f"blockedmm:{_canon_fn(n.fn)}:{n.mode}"
+            mode = phys.get(n.uid, ir.DEFAULT_PHYS).mode
+            lab = f"blockedmm:{_canon_fn(n.fn)}:{mode}"
         elif isinstance(n, ir.ForestRelational):
-            lab = f"forestrel:{_canon_fn(n.fn)}:{n.mode}"
+            mode = phys.get(n.uid, ir.DEFAULT_PHYS).mode
+            lab = f"forestrel:{_canon_fn(n.fn)}:{mode}"
         else:
             lab = type(n).__name__
         labels.append(lab)

@@ -1,0 +1,201 @@
+"""Physical layer: lowering equivalence vs the reference interpreter,
+pipeline fusion, backend-parameterized unified evaluator (np == jnp), and
+the purity of the logical IR (no physical fields on logical nodes)."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import evaluator, executor, ir
+from repro.core import physical as ph
+from repro.core.lowering import lower
+from repro.core.rules import ALL_RULES
+from repro.data import workloads
+from repro.mlfuncs import builders
+from repro.mlfuncs.registry import Registry
+from repro.relational.table import Table
+
+
+def assert_canonical_close(a, b, label=""):
+    assert set(a) == set(b), f"{label}: schema {sorted(set(a) ^ set(b))}"
+    for k in a:
+        np.testing.assert_allclose(a[k], b[k], rtol=5e-4, atol=5e-4,
+                                   err_msg=f"{label}:{k}")
+
+
+# ---------------------------------------------------------------------------
+# lowered execution == reference interpreter, all 12 workload templates
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(workloads.ALL_WORKLOADS))
+def test_lowering_equivalence(name):
+    w = workloads.ALL_WORKLOADS[name](scale=0.3)
+    ref = executor.execute_reference(w.plan, w.catalog).canonical()
+    out = ph.run(lower(w.plan, w.catalog), dict(w.catalog.tables)).canonical()
+    assert_canonical_close(ref, out, name)
+    # explicit backend override must not change results
+    out_jnp = ph.run(lower(w.plan, w.catalog, backend="jnp"),
+                     dict(w.catalog.tables)).canonical()
+    assert_canonical_close(ref, out_jnp, f"{name}/backend=jnp")
+
+
+def test_lowering_equivalence_after_physical_rules():
+    """R3-1/R3-2 annotate the side table; R4-2 re-realizes via the side
+    table; lowered execution must stay equivalent throughout."""
+    w = workloads.analytics_q1(scale=0.3)
+    base = executor.execute_reference(w.plan, w.catalog).canonical()
+    plan = w.plan
+    cfgs = ALL_RULES["R3-2"].configs(plan, w.catalog)
+    assert cfgs, "R3-2 must apply to the forest workload"
+    plan = ALL_RULES["R3-2"].apply(plan, w.catalog, cfgs[0])
+    assert plan.phys, "R3-2 must annotate the physical side table"
+    assert_canonical_close(base, executor.execute(plan, w.catalog).canonical(),
+                           "R3-2")
+    mode_cfgs = [c for c in ALL_RULES["R4-2"].configs(plan, w.catalog)
+                 if c.get("kind") == "mode"]
+    assert mode_cfgs, "R4-2 must offer relational->fused on the annotated node"
+    plan2 = ALL_RULES["R4-2"].apply(plan, w.catalog, mode_cfgs[0])
+    assert plan2.root is plan.root, "R4-2 mode change must not touch the tree"
+    assert plan2.signature() != plan.signature()
+    assert_canonical_close(base, executor.execute(plan2, w.catalog).canonical(),
+                           "R4-2")
+
+
+# ---------------------------------------------------------------------------
+# pipeline fusion
+# ---------------------------------------------------------------------------
+
+def test_filter_project_chains_fuse_into_one_pipeline():
+    w = workloads.analytics_q1(scale=0.3)  # Project(Filter(Filter(Scan)))
+    pplan = lower(w.plan, w.catalog)
+    root = pplan.root
+    assert isinstance(root, ph.PPipeline)
+    assert isinstance(root.child, ph.PScan)
+    kinds = [type(s).__name__ for s in root.stages]
+    # source-to-sink order: the two filters run before the project
+    assert kinds == ["FilterStage", "FilterStage", "ProjectStage"]
+
+    def count(node):
+        return sum(count(c) for c in node.children()) + (
+            1 if isinstance(node, ph.PPipeline) else 0)
+
+    assert count(root) == 1
+
+
+def test_pipeline_fusion_stops_at_blocking_operators():
+    w = workloads.rec_q1(scale=0.3)  # joins/aggregate/crossjoin in the middle
+    pplan = lower(w.plan, w.catalog)
+
+    def walk(node):
+        yield node
+        for c in node.children():
+            yield from walk(c)
+
+    nodes = list(walk(pplan.root))
+    assert any(isinstance(n, ph.PCrossJoin) for n in nodes)
+    assert any(isinstance(n, ph.PAggregate) for n in nodes)
+    for n in nodes:
+        if isinstance(n, ph.PPipeline):
+            assert not isinstance(n.child, ph.PPipeline), "maximal fusion"
+
+
+# ---------------------------------------------------------------------------
+# unified evaluator: np backend == jnp backend
+# ---------------------------------------------------------------------------
+
+def _expr_battery():
+    age = ir.Col("age")
+    genre = ir.Col("genre")
+    vec = ir.Col("v")
+    return [
+        ir.Const(3.5),
+        ir.BinOp("+", age, ir.Const(1.0)),
+        ir.BinOp("/", age, ir.Const(0.0)),          # guarded division
+        ir.BinOp("*", vec, age),                    # vector x scalar align
+        ir.Cmp(">", age, ir.Const(40.0)),
+        ir.Cmp("==", genre, ir.Const(2.0)),
+        ir.BoolOp("and", (ir.Cmp(">", age, ir.Const(20.0)),
+                          ir.Cmp("<", age, ir.Const(60.0)))),
+        ir.BoolOp("not", (ir.Cmp(">", age, ir.Const(40.0)),)),
+        ir.IsIn(genre, (1, 3)),
+        ir.IfExpr(ir.Cmp(">", age, ir.Const(40.0)), age,
+                  ir.BinOp("-", ir.Const(0.0), age)),
+    ]
+
+
+def test_unified_evaluator_np_matches_jnp():
+    rng = np.random.default_rng(0)
+    cols = {"age": rng.uniform(18, 80, 32).astype(np.float32),
+            "genre": rng.integers(0, 5, 32).astype(np.int32),
+            "v": rng.standard_normal((32, 4)).astype(np.float32)}
+    t = Table.from_columns(cols)
+    reg = Registry()
+    for i, e in enumerate(_expr_battery()):
+        a = evaluator.eval_expr(e, cols, reg, xp=np)
+        b = np.asarray(evaluator.eval_expr(e, t, reg, xp=jnp))
+        np.testing.assert_allclose(np.broadcast_to(a, b.shape), b,
+                                   rtol=1e-5, atol=1e-6, err_msg=f"expr {i}")
+
+
+def test_unified_evaluator_np_matches_jnp_on_workload_predicates():
+    """Scan-level call-free predicates of every workload template evaluate
+    identically under both array namespaces."""
+    checked = 0
+    for name in sorted(workloads.ALL_WORKLOADS):
+        w = workloads.ALL_WORKLOADS[name](scale=0.3)
+        for node in ir.walk(w.plan.root):
+            if not (isinstance(node, ir.Filter) and isinstance(node.child, ir.Scan)
+                    and not evaluator.has_call(node.pred)):
+                continue
+            npt = w.catalog.np_tables[node.child.table]
+            tbl = w.catalog.tables[node.child.table]
+            a = evaluator.eval_expr(node.pred, npt, w.plan.registry, xp=np)
+            b = np.asarray(evaluator.eval_expr(node.pred, tbl, w.plan.registry))
+            np.testing.assert_array_equal(np.broadcast_to(a, b.shape), b,
+                                          err_msg=f"{name}")
+            checked += 1
+    assert checked >= 3
+
+
+def test_const_evaluates_to_scalar():
+    reg = Registry()
+    v = evaluator.eval_expr(ir.Const(2.5), {}, reg)
+    assert getattr(v, "ndim", None) == 0  # no (capacity,) materialization
+    t = Table.from_columns({"x": jnp.arange(8, dtype=jnp.float32)})
+    col = evaluator.as_column(v, t.capacity)
+    assert col.shape == (8,)
+
+
+def test_call_expr_np_namespace():
+    reg = Registry()
+    reg.register(builders.ffnn("f", [4, 8, 1], seed=0))
+    x = np.random.default_rng(1).standard_normal((16, 4)).astype(np.float32)
+    e = ir.Call("f", (ir.Col("x"),))
+    a = evaluator.eval_expr(e, {"x": x}, reg, xp=np)
+    b = evaluator.eval_expr(e, Table.from_columns({"x": x}), reg, xp=jnp)
+    assert isinstance(a, np.ndarray)
+    np.testing.assert_allclose(a, np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# logical IR purity
+# ---------------------------------------------------------------------------
+
+def test_logical_nodes_carry_no_physical_fields():
+    for cls in (ir.BlockedMatmul, ir.ForestRelational):
+        names = {f.name for f in dataclasses.fields(cls)}
+        assert not names & {"mode", "backend", "n_tiles"}, cls
+
+
+def test_phys_annotation_survives_subtree_rewrites():
+    """Rewrites below an annotated node rebuild it via with_children; the
+    uid (and thus the side-table annotation) must survive."""
+    node = ir.ForestRelational(ir.Scan("t"), x_col="x", out_col="y", fn="f")
+    rebuilt = node.with_children((ir.Filter(ir.Scan("t"),
+                                            ir.Cmp(">", ir.Col("x"),
+                                                   ir.Const(0.0))),))
+    assert rebuilt.uid == node.uid
+    plan = ir.Plan(node, Registry(),
+                   {node.uid: ir.PhysConfig(mode="relational")})
+    assert plan.phys_for(rebuilt).mode == "relational"

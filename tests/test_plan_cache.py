@@ -1,0 +1,113 @@
+"""Compiled-plan cache + LRU machinery + embedder cache bounding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import executor, ir
+from repro.core.plan_cache import LRUCache, PlanCache, schema_signature
+from repro.mlfuncs import builders
+from repro.mlfuncs.registry import Registry
+from repro.relational.table import Table
+
+
+def _mini_setup(seed=0, n=32):
+    """Fresh data per seed; the registered model is the same (the cache's
+    contract: a registered fn name is a stable identity, same name ⇒ same
+    weights, as in a model registry)."""
+    rng = np.random.default_rng(seed)
+    t = Table.from_columns({
+        "id": jnp.arange(n, dtype=jnp.int32),
+        "x": jnp.asarray(rng.uniform(0, 10, n), jnp.float32),
+        "f": jnp.asarray(rng.standard_normal((n, 8)), jnp.float32)})
+    cat = ir.Catalog()
+    cat.add("t", t)
+    reg = Registry()
+    reg.register(builders.ffnn("m", [8, 16, 1], seed=1))
+    root = ir.Project(
+        ir.Filter(ir.Scan("t"), pred=ir.Cmp(">", ir.Col("x"), ir.Const(3.0))),
+        outputs=(("score", ir.Call("m", (ir.Col("f"),))),),
+        keep=("id",))
+    return ir.Plan(root, reg), cat
+
+
+def test_repeated_identical_query_hits_without_retrace():
+    cache = PlanCache()
+    plan1, cat1 = _mini_setup(seed=0)
+    fn1 = cache.get_or_compile(plan1, cat1)
+    out1 = fn1(dict(cat1.tables))
+    jax.block_until_ready(out1)
+    assert cache.stats.misses == 1 and cache.traces == 1
+
+    # a structurally identical query built from scratch (fresh tree, fresh
+    # registry, fresh — but same-shaped — data): hit, zero re-traces
+    plan2, cat2 = _mini_setup(seed=7)
+    fn2 = cache.get_or_compile(plan2, cat2)
+    out2 = fn2(dict(cat2.tables))
+    jax.block_until_ready(out2)
+    assert cache.stats.hits == 1
+    assert cache.traces == 1, "second structurally identical query re-traced"
+    assert fn2 is fn1
+
+    # and it computed the *fresh* data, not the cached plan's data
+    ref2 = executor.execute(plan2, cat2)
+    np.testing.assert_allclose(out2.canonical()["score"],
+                               ref2.canonical()["score"], rtol=1e-5, atol=1e-6)
+
+
+def test_different_structure_or_schema_misses():
+    cache = PlanCache()
+    plan, cat = _mini_setup()
+    cache.get_or_compile(plan, cat)
+    # different predicate constant -> different signature
+    other = ir.Plan(ir.Filter(ir.Scan("t"),
+                              pred=ir.Cmp(">", ir.Col("x"), ir.Const(5.0))),
+                    plan.registry)
+    cache.get_or_compile(other, cat)
+    assert cache.stats.misses == 2
+    # different capacity -> different schema signature
+    _, cat2 = _mini_setup(n=64)
+    assert schema_signature(cat) != schema_signature(cat2)
+    cache.get_or_compile(plan, cat2)
+    assert cache.stats.misses == 3
+    # same fn name, different architecture -> different registry signature
+    reg2 = Registry()
+    reg2.register(builders.ffnn("m", [8, 32, 1], seed=1))  # wider hidden
+    plan_arch = ir.Plan(plan.root, reg2)
+    cache.get_or_compile(plan_arch, cat)
+    assert cache.stats.misses == 4
+
+
+def test_compile_plan_goes_through_cache():
+    plan, cat = _mini_setup()
+    cache = PlanCache()
+    run = executor.compile_plan(plan, cat, cache=cache)
+    a = run().canonical()
+    run2 = executor.compile_plan(plan, cat, cache=cache)
+    b = run2().canonical()
+    assert cache.stats.hits == 1 and cache.traces == 1
+    np.testing.assert_allclose(a["score"], b["score"])
+
+
+def test_lru_cache_bounds_and_stats():
+    c = LRUCache(maxsize=2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1          # refresh a
+    c.put("c", 3)                   # evicts b (LRU)
+    assert c.stats.evictions == 1
+    assert "b" not in c and "a" in c and "c" in c
+    assert c.get("b") is None
+    assert c.stats.hits == 1 and c.stats.misses == 1
+    assert len(c) == 2
+
+
+def test_query_embedder_cache_is_bounded_with_stats():
+    om = pytest.importorskip("repro.core.optimizer")
+    emb = om.init_embedder(0)
+    plan, cat = _mini_setup()
+    e1 = emb.embed(plan, cat)
+    e2 = emb.embed(plan, cat)
+    np.testing.assert_allclose(e1, e2)
+    assert emb.cache_stats.hits == 1 and emb.cache_stats.misses == 1
+    assert emb._cache.maxsize == om.EMBED_CACHE_SIZE

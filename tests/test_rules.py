@@ -4,6 +4,8 @@ rule sequences."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests degrade to skips
 from hypothesis import given, settings, strategies as st
 
 from repro.relational.table import Table
