@@ -2,11 +2,15 @@
 
 Prints ``name,us_per_call,derived`` CSV. ``--quick`` shrinks workload scales
 and MCTS budgets for CI-speed runs; the default configuration is what
-bench_output.txt records.
+bench_output.txt records. ``--json PATH`` additionally writes a machine-
+readable summary (rows + per-suite wall time + failures) — CI uploads it as
+an artifact. A suite that raises marks the run failed (nonzero exit), so
+dispatch-path regressions in smoke-benchmarked suites fail CI.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -17,16 +21,21 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
+    ap.add_argument("--json", default=None,
+                    help="write a JSON summary of all rows to this path")
     args = ap.parse_args()
     q = args.quick
 
     from benchmarks import (ablation, complex_queries, kernels_bench,
                             optimizers, plan_cache_bench, random_queries,
-                            roofline, simplified_analytics)
+                            roofline, serving_bench, simplified_analytics)
 
     suites = {
         "kernels": lambda: kernels_bench.run(),
         "plan_cache": lambda: plan_cache_bench.run(scale=0.3 if q else 0.5),
+        "serving": lambda: serving_bench.run(
+            scale=0.08, batch_sizes=(1, 2, 8, 16) if q else (1, 2, 4, 8, 16),
+            mix_requests=21 if q else 42, repeats=7 if q else 15),
         "complex_queries": lambda: complex_queries.run(
             scale=0.5 if q else 1.0, iterations=15 if q else 40),
         "ablation": lambda: ablation.run(
@@ -41,6 +50,23 @@ def main() -> None:
         "roofline": lambda: roofline.run(),
     }
     only = set(args.only.split(",")) if args.only else None
+    if only:
+        unknown = only - set(suites)
+        if unknown:
+            # a typo'd --only must not silently benchmark nothing (CI
+            # relies on this run as a regression gate)
+            print(f"unknown suite(s): {sorted(unknown)}; "
+                  f"available: {sorted(suites)}", file=sys.stderr)
+            sys.exit(2)
+    summary = {"quick": q, "suites": {}, "rows": [], "failed": []}
+
+    def write_summary():
+        # rewritten after every suite so a timeout kill still leaves the
+        # partial artifact for diagnosis
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(summary, f, indent=2)
+
     print("name,us_per_call,derived")
     for name, fn in suites.items():
         if only and name not in only:
@@ -49,11 +75,21 @@ def main() -> None:
         try:
             for line in fn():
                 print(line, flush=True)
+                parts = line.split(",", 2)
+                summary["rows"].append({
+                    "name": parts[0],
+                    "us_per_call": float(parts[1]) if len(parts) > 1 else None,
+                    "derived": parts[2] if len(parts) > 2 else ""})
+            summary["suites"][name] = round(time.time() - t0, 1)
             print(f"# suite {name} done in {time.time() - t0:.1f}s",
                   file=sys.stderr)
         except Exception:
+            summary["failed"].append(name)
             print(f"# suite {name} FAILED", file=sys.stderr)
             traceback.print_exc()
+        write_summary()
+    if summary["failed"]:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

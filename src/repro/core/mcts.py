@@ -191,9 +191,14 @@ class _RNode:
     children: Dict[str, int] = dataclasses.field(default_factory=dict)
     dead: set = dataclasses.field(default_factory=set)
     untried: Optional[List[str]] = None
+    # best known rule chain from this state (as a search root) + the
+    # root-relative speedup it achieved: the warm-start replay sketch
+    best_seq: Tuple[str, ...] = ()
+    best_gain: float = 1.0
 
     def storage_bytes(self) -> int:
-        return self.embed.nbytes + 64 + 16 * len(self.children)
+        return (self.embed.nbytes + 64 + 16 * len(self.children)
+                + 8 * len(self.best_seq))
 
 
 class NodeIndex:
@@ -225,7 +230,18 @@ class NodeIndex:
 
 class ReusableMCTS:
     """Shares MCTS statistics across queries through embedding-matched
-    states. ``embed_fn(plan) -> np.ndarray`` is Query2Vec."""
+    states. ``embed_fn(plan) -> np.ndarray`` is Query2Vec.
+
+    Warm starts are two-layer: a query whose root embedding collides with a
+    well-visited stored node gets the reduced ``warm_iterations`` budget,
+    and its first iteration *replays* the stored node's best known rule
+    chain (``_RNode.best_seq``) — each rule re-configured for the concrete
+    query by ``configure_action``, inapplicable steps skipped — before the
+    remaining iterations search normally. The serving tier primes exactly
+    this structure from live traffic (``repro.serving.feedback``): one full
+    optimization per hot signature deposits its best chain in the
+    ``NodeIndex``-matched root, so the next same-family query reaches a
+    comparable plan in a fraction of the iterations."""
 
     def __init__(self, catalog_fn, embed_fn, cost_fn_factory,
                  iterations: int = 40, warm_iterations: int = 10,
@@ -266,40 +282,65 @@ class ReusableMCTS:
         self.queries += 1
         if hit:
             self.collisions += 1
-        iters = self.warm_iterations if (hit and root.n > 0) else self.iterations
+        warm = hit and root.n > 0
+        iters = self.warm_iterations if warm else self.iterations
         root_cost = cost_fn(plan)
         best_plan, best_cost = plan, root_cost
+        best_seq: Tuple[str, ...] = ()
+        replayed = False
 
-        for _ in range(iters):
+        for it in range(iters):
+            # warm start, layer 2: the first warm iteration replays the
+            # matched root's best known rule chain, re-configured for this
+            # concrete query (skipping inapplicable steps). Embedding
+            # collapse can poison child/dead bookkeeping across queries,
+            # so the sketch — not the UCB statistics — is what reliably
+            # transfers a good plan to a structural sibling.
+            replay = (list(root.best_seq)
+                      if (warm and it == 0 and root.best_seq) else None)
             node = root
             cur_plan, cur_cost = plan, root_cost
             depth = 0
             path = [node]
+            applied: list = []
             while depth < self.max_depth:
                 if node.untried is None:
                     node.untried = [a for a in self.actions if a not in node.dead]
-                # well-visited nodes (warm-started from a previous query's
-                # search) exploit their known-good children first; fresh
-                # nodes explore untried actions (standard MCTS expansion)
-                exploit = node.children and node.n >= 8
-                if node.untried and not exploit:
-                    a = self.rng.choice(node.untried)
-                    node.untried.remove(a)
+                if replay is not None:
+                    if not replay:
+                        break
+                    a = replay.pop(0)
                 else:
-                    a = self._ucb(node)
-                    if a is None:
-                        if node.untried:
-                            a = self.rng.choice(node.untried)
-                            node.untried.remove(a)
-                        else:
-                            break
+                    # well-visited nodes (warm-started from a previous
+                    # query's search) exploit their known-good children
+                    # first; fresh nodes explore untried actions (standard
+                    # MCTS expansion)
+                    exploit = node.children and node.n >= 8
+                    if node.untried and not exploit:
+                        a = self.rng.choice(node.untried)
+                        node.untried.remove(a)
+                    else:
+                        a = self._ucb(node)
+                        if a is None:
+                            if node.untried:
+                                a = self.rng.choice(node.untried)
+                                node.untried.remove(a)
+                            else:
+                                break
                 res = configure_action(cur_plan, catalog, a, cost_fn)
                 if res is None:
-                    node.dead.add(a)
-                    node.children.pop(a, None)
+                    if replay is None:
+                        # replayed steps don't mark shared state dead: the
+                        # rule may be inapplicable only for *this* query
+                        node.dead.add(a)
+                        node.children.pop(a, None)
                     continue
                 cur_plan, _ = res
                 cur_cost = cost_fn(cur_plan)
+                if replay is not None and node.untried and a in node.untried:
+                    # an applied replay step counts as this node's expansion
+                    # of that action — later iterations must not re-try it
+                    node.untried.remove(a)
                 emb = self.embed_fn(cur_plan, catalog)
                 if a in node.children:
                     child = self.nodes[node.children[a]]
@@ -309,15 +350,22 @@ class ReusableMCTS:
                 node = child
                 path.append(node)
                 depth += 1
+                applied.append(a)
                 if cur_cost < best_cost:
                     best_plan, best_cost = cur_plan, cur_cost
+                    best_seq = tuple(applied)
+            if replay is not None and applied:
+                replayed = True  # at least one stored step actually applied
             reward = (root_cost - cur_cost) / max(root_cost, 1e-12)
             for nd in path:
                 nd.n += 1
                 nd.r += reward
+        gain = root_cost / max(best_cost, 1e-12)
+        if best_seq and gain > max(root.best_gain, 1.0 + 1e-3):
+            root.best_seq, root.best_gain = best_seq, gain
         return best_plan, {"root_cost": root_cost, "best_cost": best_cost,
-                           "speedup": root_cost / max(best_cost, 1e-12),
-                           "collision": hit, "iterations": iters}
+                           "speedup": gain, "collision": hit,
+                           "iterations": iters, "replayed": replayed}
 
     def _ucb(self, node: _RNode) -> Optional[str]:
         best_a, best_v = None, -float("inf")

@@ -11,6 +11,12 @@ name + architecture (atom kinds, parameter shapes/dtypes) to the key; weight
 *values* are assumed stable per name (model-registry contract) — an in-place
 weight update that keeps name and shapes needs a fresh name or cache.
 
+``get_or_compile_batched(plan, catalog, batch_size)`` is the serving tier's
+entry point (repro.serving): same key plus a ``#vmap=B`` suffix, and the
+compiled executable is one ``jax.vmap``ped dispatch over B same-signature
+table pytrees stacked on a leading axis — N structurally identical in-flight
+queries pay one dispatch instead of N.
+
 ``LRUCache`` + ``CacheStats`` are the shared bounded-cache machinery (also
 used to bound the QueryEmbedder's embedding cache).
 """
@@ -21,6 +27,7 @@ from collections import OrderedDict
 from typing import Any, Callable, Dict, Hashable, Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import ir
 from repro.core.lowering import lower
@@ -76,6 +83,12 @@ class LRUCache:
 
     def clear(self) -> None:
         self._data.clear()
+
+
+def scan_table_names(plan: ir.Plan) -> tuple:
+    """The catalog tables a plan actually reads, sorted."""
+    return tuple(sorted({n.table for n in ir.walk(plan.root)
+                         if isinstance(n, ir.Scan)}))
 
 
 def schema_signature(catalog: ir.Catalog) -> str:
@@ -151,26 +164,106 @@ class PlanCache:
                 + "@" + registry_signature(plan))
 
     def get_or_compile(self, plan: ir.Plan, catalog: ir.Catalog,
-                       *, backend: Optional[str] = None
+                       *, backend: Optional[str] = None,
+                       cache_key: Optional[str] = None
                        ) -> Callable[[Dict[str, Table]], Table]:
-        key = self.key(plan, catalog)
+        """``cache_key`` lets hot callers (the serving tier memoizes it at
+        admission) skip the signature walk on warm dispatches; it must equal
+        ``self.key(plan, catalog)``."""
+        key = cache_key if cache_key is not None else self.key(plan, catalog)
         if backend is not None:
             key = f"{key}#be={backend}"
         fn = self._cache.get(key)
         if fn is None:
             pplan = lower(plan, catalog, backend=backend)
+            names = scan_table_names(plan)
 
             def traced(tables: Dict[str, Table]) -> Table:
                 self.traces += 1  # python side effect: runs only while tracing
                 return ph.run(pplan, tables)
 
-            fn = jax.jit(traced)
+            jfn = jax.jit(traced)
+
+            def fn(tables: Dict[str, Table]) -> Table:
+                # normalize to the scanned tables only: full-catalog and
+                # restricted callers share one traced structure (and one
+                # trace), and unused tables never cross the jit boundary
+                return jfn({k: tables[k] for k in names})
+
+            self._cache.put(key, fn)
+        return fn
+
+    def get_or_compile_batched(self, plan: ir.Plan, catalog: ir.Catalog,
+                               batch_size: int, *,
+                               backend: Optional[str] = None,
+                               cache_key: Optional[str] = None):
+        """One vmapped dispatch over ``batch_size`` same-signature queries.
+
+        Returns ``run(tables_seq) -> tuple[Table, ...]`` taking a sequence
+        of ``batch_size`` same-schema ``{name: Table}`` dicts (fresh
+        contents per query — the signature grouping guarantees the shapes
+        agree). Stacking onto the leading batch axis, the vmapped plan
+        body, and the per-query unstacking are all one jitted XLA program:
+        a micro-batch costs a single dispatch, which is the whole point
+        (per-dispatch overhead dominates repeated small queries). The batch
+        size is part of the cache key — the serving scheduler's admission
+        policy bounds how many distinct sizes traffic can create. All
+        physical operators are mask/capacity-based with static shapes,
+        which is what makes the plan body vmap-safe
+        (tests/test_serving_batched.py proves batched == sequential on all
+        12 workloads).
+        """
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        base = cache_key if cache_key is not None else self.key(plan, catalog)
+        key = base + f"#vmap={batch_size}"
+        if backend is not None:
+            key = f"{key}#be={backend}"
+        fn = self._cache.get(key)
+        if fn is None:
+            pplan = lower(plan, catalog, backend=backend)
+            names = scan_table_names(plan)
+
+            def traced(tables_seq):
+                self.traces += 1  # python side effect: runs only while tracing
+                stacked = stack_tables(list(tables_seq))
+                out = jax.vmap(lambda tables: ph.run(pplan, tables))(stacked)
+                return tuple(unstack_table(out, i)
+                             for i in range(batch_size))
+
+            jfn = jax.jit(traced)
+
+            def fn(tables_seq):
+                if len(tables_seq) != batch_size:
+                    raise ValueError(
+                        f"batched executable compiled for batch_size="
+                        f"{batch_size}, got {len(tables_seq)} table dicts")
+                return jfn(tuple({k: t[k] for k in names}
+                                 for t in tables_seq))
+
             self._cache.put(key, fn)
         return fn
 
     def __call__(self, plan: ir.Plan, catalog: ir.Catalog) -> Table:
         """Convenience: compile-or-reuse, then execute on catalog tables."""
         return self.get_or_compile(plan, catalog)(dict(catalog.tables))
+
+
+def stack_tables(tables_list) -> Dict[str, Table]:
+    """Stack N same-schema ``{name: Table}`` dicts on a new leading axis.
+
+    All dicts must share one schema signature (same table names, column
+    names, dtypes, capacities) — exactly the property the serving tier's
+    signature grouping guarantees.
+    """
+    if not tables_list:
+        raise ValueError("stack_tables needs at least one table dict")
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *tables_list)
+
+
+def unstack_table(batched: Table, i: int) -> Table:
+    """Slice query ``i``'s result out of a batched executable's output."""
+    return jax.tree_util.tree_map(lambda x: x[i], batched)
 
 
 GLOBAL_PLAN_CACHE = PlanCache()

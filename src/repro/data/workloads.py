@@ -10,6 +10,7 @@ from __future__ import annotations
 import dataclasses
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.core import ir
@@ -24,6 +25,21 @@ class Workload:
     plan: ir.Plan
     catalog: ir.Catalog
     memory_budget: float = 512e6  # bytes; the paper's 61GB box, scaled
+
+
+def roll_tables(tables, shift: int):
+    """One legal parameterized instance of ``tables``: every column and the
+    valid mask roll together by ``shift`` rows, so row integrity (join keys,
+    masks) is preserved while the contents differ from the original. The
+    canonical way tests and benchmarks fabricate same-signature traffic for
+    the serving tier."""
+    return jax.tree_util.tree_map(lambda x: jnp.roll(x, shift, axis=0),
+                                  tables)
+
+
+def rolled_instances(tables, n: int):
+    """N same-schema parameterized instances (shift 0..n-1)."""
+    return [roll_tables(tables, i) for i in range(n)]
 
 
 def _measured_sel(fn, table_np, cols, thresh=0.5, op=">"):

@@ -44,15 +44,19 @@ class Server:
         self.cache = lm.init_cache(cfg, batch, max_len)
         self.active: List[Optional[Request]] = [None] * batch
         self.tokens = np.zeros((batch,), np.int32)
+        self.free_slots = batch
 
     def admit(self, req: Request) -> bool:
+        if self.free_slots == 0:
+            return False
         for i, slot in enumerate(self.active):
             if slot is None:
                 self.active[i] = req
                 # prompt processed token-by-token (shared cache across slots
-                # keeps this example simple; per-slot caches + prefill is the
-                # production path, exercised in tests/test_serving.py)
+                # keeps this example simple; admit/step are smoke-tested on
+                # the smoke config in tests/test_serving.py)
                 self.tokens[i] = int(req.prompt[0])
+                self.free_slots -= 1
                 return True
         return False
 
@@ -74,8 +78,17 @@ class Server:
             else:
                 req.done = True
                 self.active[i] = None
+                self.free_slots += 1
                 done += 1
         return done
+
+
+def max_decode_steps(requests: List[Request]) -> int:
+    """Upper bound on decode steps to serve ``requests``: while any request
+    is pending or active, every step advances at least one active request by
+    one token, and each request occupies at most prompt+max_new+1 steps
+    (the +1 is the retirement step)."""
+    return sum(len(r.prompt) + r.max_new + 1 for r in requests) + 1
 
 
 def main() -> None:
@@ -96,13 +109,19 @@ def main() -> None:
     t0 = time.perf_counter()
     finished = 0
     steps = 0
+    step_bound = max_decode_steps(pending)
     while finished < args.requests:
-        while pending and server.admit(pending[0]):
+        # only touch the admission path when a slot is actually free; a
+        # refused request stays at the head of the queue
+        while pending and server.free_slots > 0:
+            if not server.admit(pending[0]):
+                break
             pending.pop(0)
         finished += server.step()
         steps += 1
-        if steps > 10_000:
-            raise RuntimeError("serve loop did not converge")
+        if steps > step_bound:
+            raise RuntimeError(
+                f"serve loop did not converge in {step_bound} steps")
     dt = time.perf_counter() - t0
     print(f"served {args.requests} requests in {dt:.2f}s "
           f"({steps} decode steps, {args.requests * args.max_new / dt:.1f} tok/s)")

@@ -1,0 +1,22 @@
+"""Serving tier: signature-grouped micro-batching over the compiled-plan cache.
+
+The paper's headline traffic — thousands of parameterized queries that
+cluster into a handful of structural signatures — enters through
+``QueryServer.submit``; the micro-batch scheduler (``MicroBatcher``) groups
+in-flight requests by their ``PlanCache.key()`` signature, and the batched
+executor stacks each group's table pytrees on a leading axis and runs them
+as one ``jax.vmap``ped dispatch of the cached executable. Per-signature
+hit/latency statistics flow back into ``ReusableMCTS`` warm-starts through
+``repro.serving.feedback``.
+"""
+from repro.serving.request import QueryRequest
+from repro.serving.batcher import MicroBatch, MicroBatcher
+from repro.serving.executor import BatchedExecutor
+from repro.serving.server import QueryServer, SignatureStats
+from repro.serving.feedback import SignatureExport, warm_start_from_server
+
+__all__ = [
+    "QueryRequest", "MicroBatch", "MicroBatcher", "BatchedExecutor",
+    "QueryServer", "SignatureStats", "SignatureExport",
+    "warm_start_from_server",
+]

@@ -1,0 +1,76 @@
+"""Feedback channel: serving-tier signature statistics -> optimizer warm-starts.
+
+Closes the ROADMAP loop "feed cache hit statistics back into ReusableMCTS
+warm-starts": the signatures the server actually sees — weighted by traffic
+volume x dispatch latency, i.e. where optimization time pays off — are
+re-optimized once against their representative plan. Each such run
+populates the optimizer's embedding-keyed global node store
+(``core/mcts.py`` ``NodeIndex``), so the *next* query of that family
+(including parameter variants whose exact signature differs but whose
+Query2Vec embedding collides) starts from a warm root and needs only
+``warm_iterations`` instead of a cold full search.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core import ir
+from repro.core.mcts import ReusableMCTS
+from repro.serving.server import QueryServer
+
+
+@dataclasses.dataclass
+class SignatureExport:
+    """One serving signature's traffic summary, with its representative
+    query attached so the optimizer can replay it."""
+    key: str
+    requests: int
+    dispatches: int
+    mean_occupancy: float
+    mean_dispatch_s: float
+    plan: ir.Plan
+    catalog: ir.Catalog
+
+    @property
+    def weight(self) -> float:
+        """Traffic volume x unit latency: expected seconds this signature
+        costs the fleet, the natural priority for optimizer attention."""
+        return self.requests * max(self.mean_dispatch_s, 1e-9)
+
+
+def export_signature_stats(server: QueryServer) -> List[SignatureExport]:
+    """Snapshot the server's per-signature stats, heaviest traffic first."""
+    exports = [
+        SignatureExport(key=s.key, requests=s.requests,
+                        dispatches=s.dispatches,
+                        mean_occupancy=s.mean_occupancy,
+                        mean_dispatch_s=s.mean_dispatch_s,
+                        plan=s.plan, catalog=s.catalog)
+        for s in server.signatures.values()
+        if s.plan is not None and s.dispatches > 0
+    ]
+    exports.sort(key=lambda e: -e.weight)
+    return exports
+
+
+def warm_start_from_server(mcts: ReusableMCTS,
+                           exports: List[SignatureExport],
+                           top_k: int = 4) -> Dict[str, object]:
+    """Prime the reusable optimizer's node store from server traffic.
+
+    Runs one full optimization per hot signature (heaviest ``top_k`` by
+    ``weight``). The visits land in the shared ``NodeIndex``-backed store,
+    so subsequent same-family queries collide with a well-visited root and
+    take the warm path (fewer iterations, exploit known-good actions first).
+    Returns a summary of what was primed.
+    """
+    primed = []
+    for e in exports[:top_k]:
+        _, stats = mcts.optimize(e.plan, e.catalog)
+        primed.append({"key": e.key, "requests": e.requests,
+                       "weight": e.weight,
+                       "best_cost": stats["best_cost"],
+                       "iterations": stats["iterations"]})
+    return {"primed": primed, "store_nodes": len(mcts.nodes),
+            "store_bytes": mcts.storage_bytes()}

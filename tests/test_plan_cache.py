@@ -102,6 +102,50 @@ def test_lru_cache_bounds_and_stats():
     assert len(c) == 2
 
 
+def test_lru_cache_eviction_order_under_interleaved_get_put():
+    c = LRUCache(maxsize=3)
+    c.put("a", 1)
+    c.put("b", 2)
+    c.put("c", 3)
+    assert c.get("a") == 1          # order now b, c, a
+    c.put("b", 20)                  # refresh by put: order c, a, b
+    c.put("d", 4)                   # evicts c (true LRU, not insert order)
+    assert "c" not in c and "a" in c and "b" in c and "d" in c
+    assert c.get("c") is None
+    c.put("e", 5)                   # evicts a (oldest touch)
+    assert "a" not in c and "b" in c and "d" in c and "e" in c
+    assert c.get("b") == 20         # refreshed value survived
+    assert c.stats.evictions == 2
+
+
+def test_lru_cache_clear_resets_contents_but_preserves_stats():
+    c = LRUCache(maxsize=4)
+    c.put("a", 1)
+    assert c.get("a") == 1 and c.get("zz") is None
+    hits, misses = c.stats.hits, c.stats.misses
+    c.clear()
+    assert len(c) == 0 and "a" not in c
+    # stats survive a clear: the counters describe lifetime traffic
+    assert c.stats.hits == hits and c.stats.misses == misses
+    assert c.get("a") is None       # post-clear lookup is a miss
+    assert c.stats.misses == misses + 1
+    c.put("b", 2)                   # cache is usable again
+    assert c.get("b") == 2
+
+
+def test_lru_cache_maxsize_one_edge_case():
+    c = LRUCache(maxsize=1)
+    c.put("a", 1)
+    c.put("b", 2)                   # immediately evicts a
+    assert len(c) == 1 and "a" not in c and c.get("b") == 2
+    assert c.stats.evictions == 1
+    c.put("b", 3)                   # overwrite in place: no eviction
+    assert c.get("b") == 3 and c.stats.evictions == 1
+    # maxsize is clamped to >= 1 so the cache can always hold one entry
+    assert LRUCache(maxsize=0).maxsize == 1
+    assert LRUCache(maxsize=-5).maxsize == 1
+
+
 def test_query_embedder_cache_is_bounded_with_stats():
     om = pytest.importorskip("repro.core.optimizer")
     emb = om.init_embedder(0)

@@ -1,0 +1,245 @@
+"""Serving tier: micro-batcher policy, QueryServer end-to-end, the
+launch-server admit/step loop, and the signature-stats -> ReusableMCTS
+warm-start feedback channel."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import executor, ir
+from repro.core.mcts import ReusableMCTS
+from repro.core.planner import analytic_cost_fn
+from repro.data import templates, workloads
+from repro.mlfuncs import builders
+from repro.mlfuncs.registry import Registry
+from repro.relational.table import Table
+from repro.serving import (MicroBatcher, QueryRequest, QueryServer, feedback)
+
+
+def _mini(seed=0, n=32):
+    rng = np.random.default_rng(seed)
+    t = Table.from_columns({
+        "id": jnp.arange(n, dtype=jnp.int32),
+        "x": jnp.asarray(rng.uniform(0, 10, n), jnp.float32),
+        "f": jnp.asarray(rng.standard_normal((n, 8)), jnp.float32)})
+    cat = ir.Catalog()
+    cat.add("t", t)
+    reg = Registry()
+    reg.register(builders.ffnn("m", [8, 16, 1], seed=1))
+    root = ir.Project(
+        ir.Filter(ir.Scan("t"), pred=ir.Cmp(">", ir.Col("x"), ir.Const(3.0))),
+        outputs=(("score", ir.Call("m", (ir.Col("f"),))),),
+        keep=("id",))
+    return ir.Plan(root, reg), cat
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# micro-batcher admission policy
+# ---------------------------------------------------------------------------
+
+def _req(rid, key, t):
+    return QueryRequest(rid=rid, plan=None, catalog=None, tables={},
+                        key=key, submit_t=t)
+
+
+def test_batcher_dispatches_full_group_immediately():
+    b = MicroBatcher(max_batch_size=2, max_wait_s=1.0)
+    b.add(_req(0, "sig_a", 0.0))
+    assert b.pop_ready(now=0.0) == []          # under size, under deadline
+    b.add(_req(1, "sig_a", 0.0))
+    ready = b.pop_ready(now=0.0)
+    assert len(ready) == 1 and len(ready[0]) == 2
+    assert b.pending() == 0
+
+
+def test_batcher_deadline_flushes_partial_group():
+    b = MicroBatcher(max_batch_size=8, max_wait_s=0.5)
+    b.add(_req(0, "sig_a", 0.0))
+    b.add(_req(1, "sig_b", 0.3))
+    assert b.pop_ready(now=0.4) == []
+    ready = b.pop_ready(now=0.6)               # only sig_a's deadline passed
+    assert [r.key for r in ready[0].requests] == ["sig_a"]
+    assert b.pending() == 1
+    ready = b.pop_ready(now=0.9)
+    assert ready[0].requests[0].key == "sig_b"
+
+
+def test_batcher_groups_by_signature_and_splits_oversize():
+    b = MicroBatcher(max_batch_size=2, max_wait_s=10.0)
+    for i in range(5):
+        b.add(_req(i, "sig_a" if i % 2 == 0 else "sig_b", 0.0))
+    ready = b.pop_ready(now=0.0)               # 3x sig_a -> one full batch
+    assert len(ready) == 2                     # sig_a[2] + sig_b[2]
+    assert all(len(batch) == 2 for batch in ready)
+    assert {batch.key for batch in ready} == {"sig_a", "sig_b"}
+    assert b.pending() == 1                    # sig_a remainder waits
+    assert len(b.pop_all()) == 1
+
+
+# ---------------------------------------------------------------------------
+# query server end-to-end
+# ---------------------------------------------------------------------------
+
+def test_query_server_batches_same_signature_and_results_match():
+    clock = FakeClock()
+    srv = QueryServer(max_batch_size=4, max_wait_s=0.01, clock=clock)
+    reqs = []
+    for s in range(6):
+        plan, cat = _mini(seed=s)              # fresh build, same signature
+        reqs.append(srv.submit(plan, cat))
+    assert srv.pending() == 6 and not any(r.done for r in reqs)
+    assert srv.step() == 4                     # one full micro-batch
+    clock.t = 0.02
+    assert srv.step() == 2                     # deadline flush
+    assert all(r.done for r in reqs)
+    assert all(r.batch_size >= 2 for r in reqs)
+
+    # one signature, two dispatches, two traces (one per batch size)
+    assert len(srv.signatures) == 1
+    sig = next(iter(srv.signatures.values()))
+    assert sig.requests == 6 and sig.dispatches == 2
+    assert sig.mean_occupancy == 3.0
+    assert srv.cache.traces == 2
+
+    # every batched result equals its per-request reference execution
+    for s, r in enumerate(reqs):
+        ref = executor.execute(*_mini(seed=s))
+        np.testing.assert_allclose(r.result.canonical()["score"],
+                                   ref.canonical()["score"],
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_query_server_drain_and_singleton_batch():
+    srv = QueryServer(max_batch_size=8, max_wait_s=100.0)
+    plan, cat = _mini(seed=0)
+    req = srv.submit(plan, cat)
+    assert srv.step() == 0                     # neither full nor overdue
+    assert srv.drain() == 1
+    assert req.done and req.batch_size == 1
+    # singleton used the plain cached executable (no B=1 vmap variant)
+    assert srv.cache.stats.misses == 1
+    ref = executor.execute(*_mini(seed=0))
+    np.testing.assert_allclose(req.result.canonical()["score"],
+                               ref.canonical()["score"], rtol=1e-5, atol=1e-6)
+
+
+def test_query_server_distinct_signatures_never_mix():
+    srv = QueryServer(max_batch_size=4, max_wait_s=0.0)
+    pa, ca = _mini(seed=0)
+    other = ir.Plan(ir.Filter(ir.Scan("t"),
+                              pred=ir.Cmp(">", ir.Col("x"), ir.Const(5.0))),
+                    pa.registry)
+    ra = srv.submit(pa, ca)
+    rb = srv.submit(other, ca)
+    assert ra.key != rb.key
+    srv.drain()
+    assert len(srv.signatures) == 2
+    assert ra.batch_size == 1 and rb.batch_size == 1
+
+
+def test_query_server_failed_dispatch_marks_requests_not_hangs():
+    """A payload whose shapes disagree with the signature's schema fails
+    its own micro-batch: every request comes back done-with-error, later
+    traffic still serves, and the loop survives."""
+    srv = QueryServer(max_batch_size=4, max_wait_s=0.0)
+    plan, cat = _mini(seed=0)
+    good = srv.submit(plan, cat)
+    bad_tables = {"t": Table.from_columns(
+        {"id": jnp.arange(7, dtype=jnp.int32),
+         "x": jnp.zeros((7,), jnp.float32),
+         "f": jnp.zeros((7, 8), jnp.float32)})}
+    bad = srv.submit(plan, cat, bad_tables)     # same key, wrong capacity
+    srv.drain()
+    assert good.done and bad.done
+    assert good.error is not None and bad.error is not None
+    assert srv.failed == 2 and srv.pending() == 0
+    sig = next(iter(srv.signatures.values()))
+    assert sig.failures == 2
+
+    # the server still serves well-formed traffic afterwards
+    ok = srv.submit(plan, cat)
+    srv.drain()
+    assert ok.done and ok.error is None and ok.result is not None
+    assert srv.completed == 1
+
+
+# ---------------------------------------------------------------------------
+# feedback channel: server stats -> optimizer warm-start (fixed seeds)
+# ---------------------------------------------------------------------------
+
+def test_server_feedback_warm_starts_optimizer():
+    from repro.core import optimizer as om
+    emb = om.init_embedder(0)
+
+    def mk():
+        return ReusableMCTS(catalog_fn=None, embed_fn=emb.embed,
+                            cost_fn_factory=lambda cat: analytic_cost_fn(cat),
+                            iterations=16, warm_iterations=4,
+                            sim_threshold=0.98, seed=0)
+
+    variant = templates.sample_query(1, seed=2, scale=0.3)
+    cold = mk()
+    _, s_cold = cold.optimize(*variant)
+    assert s_cold["iterations"] == 16 and not s_cold["collision"]
+
+    # the server sees repeated parameterized traffic of the template-1 family
+    srv = QueryServer(max_batch_size=4, max_wait_s=0.0)
+    for i in range(6):
+        plan, cat = templates.sample_query(1, seed=1, scale=0.3)
+        srv.submit(plan, cat, workloads.roll_tables(dict(cat.tables), i))
+    srv.drain()
+
+    exports = feedback.export_signature_stats(srv)
+    assert len(exports) == 1
+    assert exports[0].requests == 6 and exports[0].mean_dispatch_s > 0.0
+
+    warm = mk()
+    summary = feedback.warm_start_from_server(warm, exports, top_k=1)
+    assert len(summary["primed"]) == 1 and summary["store_nodes"] > 0
+
+    _, s_warm = warm.optimize(*variant)
+    # warm run collided with the primed root, replayed its best rule chain,
+    # and reached an as-good-or-better plan in a quarter of the iterations
+    assert s_warm["collision"] and s_warm["replayed"]
+    assert s_warm["iterations"] < s_cold["iterations"]
+    assert s_warm["best_cost"] <= s_cold["best_cost"] * 1.05
+    assert s_warm["speedup"] > 1.5
+
+
+# ---------------------------------------------------------------------------
+# launch-server (LM decode) admit/step smoke test
+# ---------------------------------------------------------------------------
+
+def test_launch_server_admit_and_step_smoke():
+    from repro.configs import get_smoke_config
+    from repro.launch import serve
+
+    cfg = get_smoke_config("granite-3-2b")
+    server = serve.Server(cfg, batch=2, max_len=32)
+    rng = np.random.default_rng(0)
+    reqs = [serve.Request(rid=i,
+                          prompt=rng.integers(1, cfg.vocab, 3),
+                          max_new=2)
+            for i in range(3)]
+    assert server.free_slots == 2
+    assert server.admit(reqs[0]) and server.admit(reqs[1])
+    assert server.free_slots == 0
+    assert not server.admit(reqs[2])           # full: admission refused
+
+    bound = serve.max_decode_steps(reqs[:2])
+    finished = steps = 0
+    while finished < 2 and steps <= bound:
+        finished += server.step()
+        steps += 1
+    assert finished == 2
+    assert all(r.done for r in reqs[:2])
+    assert all(len(r.out) == len(r.prompt) + r.max_new for r in reqs[:2])
+    assert server.free_slots == 2
+    assert server.admit(reqs[2])               # slots were recycled

@@ -1,0 +1,127 @@
+"""Batched-dispatch equivalence: stacking N parameterized instances of a
+query and running the vmapped cached executable must produce the same
+results as N sequential ``PlanCache`` dispatches — for every one of the 12
+workload templates, and for the non-default 'relational' realizations."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ir
+from repro.core.plan_cache import (PlanCache, stack_tables, unstack_table)
+from repro.data import workloads
+from repro.mlfuncs import builders
+from repro.mlfuncs.functions import Atom, MLGraph, MLNode, MLFunction
+from repro.mlfuncs.registry import Registry
+from repro.relational.table import Table
+
+SCALE = 0.25
+BATCH = 3
+
+
+def _assert_batched_equals_sequential(plan, catalog, batch=BATCH,
+                                      rtol=2e-5, atol=2e-5):
+    cache = PlanCache()
+    tabs = workloads.rolled_instances(dict(catalog.tables), batch)
+    run = cache.get_or_compile(plan, catalog)
+    seq = [run(t) for t in tabs]
+    run_b = cache.get_or_compile_batched(plan, catalog, batch)
+    outs = run_b(tuple(tabs))
+    assert len(outs) == batch
+    for i, s in enumerate(seq):
+        o = outs[i]
+        assert set(o.columns) == set(s.columns)
+        np.testing.assert_array_equal(np.asarray(o.valid), np.asarray(s.valid))
+        for k in s.columns:
+            np.testing.assert_allclose(np.asarray(o[k]), np.asarray(s[k]),
+                                       rtol=rtol, atol=atol, err_msg=k)
+    # exactly two traces: the sequential executable and the vmapped one
+    assert cache.traces == 2
+    return cache
+
+
+@pytest.mark.parametrize("name", sorted(workloads.ALL_WORKLOADS))
+def test_batched_equals_sequential_all_workloads(name):
+    w = workloads.ALL_WORKLOADS[name](scale=SCALE)
+    _assert_batched_equals_sequential(w.plan, w.catalog)
+
+
+def test_batched_relational_realizations():
+    """The literal tile/tree-relation pipelines (mode='relational') stream
+    Table cross-joins inside lax.scan — they must vmap like everything
+    else (static capacities, mask-aware)."""
+    rng = np.random.default_rng(0)
+    n = 16
+    t = Table.from_columns({
+        "id": jnp.arange(n, dtype=jnp.int32),
+        "f": jnp.asarray(rng.standard_normal((n, 24)), jnp.float32)})
+    cat = ir.Catalog()
+    cat.add("t", t)
+    reg = Registry()
+    w = (rng.standard_normal((24, 48)) / 5).astype(np.float32)
+    reg.register(MLFunction("mm", graph=MLGraph(
+        [MLNode(0, Atom("matmul", {"w": w}), (("in", 0),))], 0, 1)))
+    reg.register(builders.decision_forest("df", n_trees=8, depth=4,
+                                          n_features=24, seed=2))
+    bm = ir.BlockedMatmul(ir.Scan("t"), x_col="f", out_col="y", fn="mm")
+    fr = ir.ForestRelational(bm, x_col="f", out_col="vote", fn="df",
+                             keep=("id", "y"))
+    plan = ir.Plan(fr, reg, phys={
+        bm.uid: ir.PhysConfig(mode="relational", backend="jnp", n_tiles=3),
+        fr.uid: ir.PhysConfig(mode="relational", backend="jnp")})
+    _assert_batched_equals_sequential(plan, cat, rtol=1e-5, atol=1e-5)
+
+
+def test_batched_executable_is_cached_per_batch_size():
+    w = workloads.ALL_WORKLOADS["simple_q1"](scale=SCALE)
+    cache = PlanCache()
+    f2 = cache.get_or_compile_batched(w.plan, w.catalog, 2)
+    f2b = cache.get_or_compile_batched(w.plan, w.catalog, 2)
+    assert f2b is f2 and cache.stats.hits == 1
+    f3 = cache.get_or_compile_batched(w.plan, w.catalog, 3)
+    assert f3 is not f2 and cache.stats.misses == 2
+    # batched and unbatched variants key separately
+    f1 = cache.get_or_compile(w.plan, w.catalog)
+    assert f1 is not f2 and cache.stats.misses == 3
+
+
+def test_batched_executable_rejects_wrong_batch_size():
+    w = workloads.ALL_WORKLOADS["simple_q1"](scale=SCALE)
+    cache = PlanCache()
+    tabs = workloads.rolled_instances(dict(w.catalog.tables), 3)
+    run_b = cache.get_or_compile_batched(w.plan, w.catalog, 3)
+    with pytest.raises(ValueError, match="batch_size"):
+        run_b(tuple(tabs[:2]))
+    with pytest.raises(ValueError):
+        cache.get_or_compile_batched(w.plan, w.catalog, 0)
+
+
+def test_full_and_restricted_table_dicts_share_one_trace():
+    """simple_q1 scans one of the seven tpcxai tables; callers passing the
+    full catalog dict and callers passing only the scanned tables must hit
+    the same traced structure (no silent recompile on the warm path)."""
+    from repro.core.plan_cache import scan_table_names
+    w = workloads.ALL_WORKLOADS["simple_q1"](scale=SCALE)
+    names = scan_table_names(w.plan)
+    assert len(names) < len(w.catalog.tables)
+    cache = PlanCache()
+    fn = cache.get_or_compile(w.plan, w.catalog)
+    fn(dict(w.catalog.tables))                       # full catalog payload
+    fn({k: w.catalog.tables[k] for k in names})      # restricted payload
+    assert cache.traces == 1
+
+
+def test_stack_unstack_roundtrip():
+    w = workloads.ALL_WORKLOADS["simple_q1"](scale=SCALE)
+    tabs = workloads.rolled_instances(dict(w.catalog.tables), 2)
+    stacked = stack_tables(tabs)
+    for name, table in stacked.items():
+        assert table.valid.shape[0] == 2
+        for col in table.columns.values():
+            assert col.shape[0] == 2
+    for i, orig in enumerate(tabs):
+        back = {k: unstack_table(v, i) for k, v in stacked.items()}
+        for k in orig:
+            np.testing.assert_array_equal(np.asarray(back[k].valid),
+                                          np.asarray(orig[k].valid))
+    with pytest.raises(ValueError):
+        stack_tables([])
