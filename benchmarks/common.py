@@ -42,6 +42,19 @@ def time_plan(plan: ir.Plan, catalog: ir.Catalog, repeats: int = 3,
     return times[len(times) // 2], compile_s
 
 
+def best_time(fn: Callable, repeats: int = 9) -> float:
+    """Min over repeats: the standard noise-robust microbenchmark estimator
+    (load spikes only ever add time). The first call runs outside the
+    window, warming/compiling whatever the closure touches."""
+    jax.block_until_ready(fn())
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
 def time_fn(fn: Callable, *args, repeats: int = 5) -> float:
     out = fn(*args)
     jax.block_until_ready(out)

@@ -28,7 +28,8 @@ def main() -> None:
 
     from benchmarks import (ablation, complex_queries, kernels_bench,
                             optimizers, plan_cache_bench, random_queries,
-                            roofline, serving_bench, simplified_analytics)
+                            roofline, serving_bench, sharded_bench,
+                            simplified_analytics)
 
     suites = {
         "kernels": lambda: kernels_bench.run(),
@@ -36,6 +37,11 @@ def main() -> None:
         "serving": lambda: serving_bench.run(
             scale=0.08, batch_sizes=(1, 2, 8, 16) if q else (1, 2, 4, 8, 16),
             mix_requests=21 if q else 42, repeats=7 if q else 15),
+        # multi-device batch sharding; CI forces 8 fake CPU devices via
+        # XLA_FLAGS=--xla_force_host_platform_device_count=8 for this suite
+        "sharded": lambda: sharded_bench.run(
+            scale=0.08, batch_size=8 if q else 16,
+            serve_requests=16 if q else 32, repeats=5 if q else 9),
         "complex_queries": lambda: complex_queries.run(
             scale=0.5 if q else 1.0, iterations=15 if q else 40),
         "ablation": lambda: ablation.run(

@@ -28,25 +28,13 @@ from typing import List, Sequence, Tuple
 
 import jax
 
-from benchmarks.common import csv_line
+from benchmarks.common import best_time as _best_time, csv_line
 from repro.core.plan_cache import PlanCache
 from repro.data import workloads
 from repro.serving import QueryServer
 
 SCALING_QUERIES = ["simple_q2", "simple_q3"]
 MIX_QUERIES = ["simple_q1", "simple_q2", "simple_q3"]
-
-
-def _best_time(fn, repeats: int = 9) -> float:
-    """Min over repeats: the standard noise-robust microbenchmark estimator
-    (load spikes only ever add time), applied to both dispatch paths."""
-    jax.block_until_ready(fn())  # warm / compile outside the window
-    ts = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        ts.append(time.perf_counter() - t0)
-    return min(ts)
 
 
 def run(scale: float = 0.08, batch_sizes: Sequence[int] = (1, 2, 4, 8, 16),

@@ -9,7 +9,11 @@ pipeline instead of one interpreter dispatch per logical node.
 
 ``backend`` overrides every annotation's backend ('jnp' forces the pure-XLA
 path, 'pallas' the TPU kernels) without touching the plan — the paper's
-"re-realize without touching the logical query" knob.
+"re-realize without touching the logical query" knob. ``backend="sharded"``
+is the multi-device realization: per-node it resolves to the pure-XLA path
+(each mesh device runs an ordinary single-device program on its slice of the
+stacked batch axis — see ``PlanCache.get_or_compile_sharded``), while the
+choice itself stays first-class in compiled-plan cache keys.
 """
 from __future__ import annotations
 
@@ -19,10 +23,17 @@ from repro.core import ir
 from repro.core import physical as ph
 
 
+# plan-level realizations and the node-level backend they resolve to: the
+# sharded path splits the stacked batch axis *around* the plan body, so each
+# device's slice runs the ordinary pure-XLA program
+_PLAN_LEVEL_BACKENDS = {"sharded": "jnp"}
+
+
 def _config(plan: ir.Plan, node: ir.RelNode,
             backend: Optional[str]) -> ir.PhysConfig:
     cfg = plan.phys_for(node)  # resolves the weight-derived n_tiles default
     if backend is not None:
+        backend = _PLAN_LEVEL_BACKENDS.get(backend, backend)
         cfg = ir.PhysConfig(mode=cfg.mode, backend=backend, n_tiles=cfg.n_tiles)
     return cfg
 

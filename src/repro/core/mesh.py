@@ -1,0 +1,116 @@
+"""Device-mesh utilities for the sharded execution path (``backend="sharded"``).
+
+The serving tier's micro-batch axis is embarrassingly parallel: B stacked
+same-signature queries need no cross-query communication, so the batch axis
+of a vmapped plan body can be split over a 1-D device mesh with ``shard_map``
+and no operator changes. This module owns the mesh plumbing for that path:
+
+* ``data_mesh``      — a 1-D mesh over the host's devices, batch axis only.
+* ``batch_ways``     — total shard count over the mesh's batch axes.
+* ``shard_spec``     — the batch PartitionSpec, via the same
+                       divisibility-fitting policy the model stack uses
+                       (``repro.models.sharding.batch_spec``): shard only
+                       when the batch divides the device count, else
+                       replicate.
+* ``can_shard``      — eligibility predicate the plan cache and the serving
+                       executor share: >1 device on the batch axes AND the
+                       fitting policy actually sharded.
+* ``mesh_signature`` — the mesh's contribution to compiled-plan cache keys.
+* ``shard_batch``    — wrap a stacked-batch function in ``shard_map`` over
+                       the mesh's batch axes (jax-version compatible).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.sharding import batch_axes, batch_spec
+
+DATA_AXIS = "data"
+
+
+def data_mesh(n_devices: Optional[int] = None, *,
+              devices: Optional[Sequence] = None,
+              axis: str = DATA_AXIS) -> Mesh:
+    """A 1-D mesh over (a prefix of) the host's devices.
+
+    The single axis is the micro-batch/data axis; there is no model axis —
+    the sharded execution path replicates weights and splits only the
+    stacked batch dimension. ``axis`` must be a name the batch-axis policy
+    recognizes (``models.sharding.batch_axes``), otherwise the mesh would
+    silently never shard anything.
+    """
+    if axis not in ("pod", DATA_AXIS):
+        raise ValueError(
+            f"axis {axis!r} is not a recognized batch axis "
+            f"('pod'/'{DATA_AXIS}'): can_shard would always be False")
+    if devices is None:
+        devices = jax.devices()
+    devices = list(devices)
+    if n_devices is not None:
+        if not 1 <= n_devices <= len(devices):
+            raise ValueError(
+                f"n_devices={n_devices} out of range for "
+                f"{len(devices)} visible device(s)")
+        devices = devices[:n_devices]
+    return Mesh(np.asarray(devices), (axis,))
+
+
+def batch_ways(mesh: Mesh) -> int:
+    """Total shard count over the mesh's batch axes (pod x data)."""
+    ways = 1
+    for a in batch_axes(mesh):
+        ways *= mesh.shape[a]
+    return ways
+
+
+def shard_spec(mesh: Mesh, batch_size: int) -> P:
+    """Batch-axis PartitionSpec under the divisibility-fitting policy."""
+    return batch_spec(mesh, batch_size)
+
+
+def can_shard(mesh: Optional[Mesh], batch_size: int) -> bool:
+    """True iff the mesh would actually split ``batch_size``: more than one
+    device on the batch axes and the fitting policy sharded (batch divides
+    the device count). Everything else falls back to the single-device
+    vmapped program."""
+    if mesh is None or batch_ways(mesh) <= 1:
+        return False
+    return any(ax is not None for ax in shard_spec(mesh, batch_size))
+
+
+def mesh_signature(mesh: Mesh) -> str:
+    """The mesh's contribution to a compiled-plan cache key: axis layout and
+    per-axis size (device *identity* doesn't change the traced program)."""
+    return "x".join(f"{a}={mesh.shape[a]}" for a in mesh.axis_names)
+
+
+def shard_batch(fn: Callable, mesh: Mesh) -> Callable:
+    """``shard_map`` a stacked-batch function over the mesh's batch axes.
+
+    ``fn`` takes / returns pytrees whose every leaf has the stacked batch as
+    its leading axis; each device runs ``fn`` on its ``batch/ways`` slice.
+    Callers must have checked ``can_shard`` — the spec here is
+    unconditional. Weights and other closed-over arrays are replicated.
+    """
+    try:  # jax >= 0.6
+        from jax import shard_map as _shard_map
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as _shard_map
+    spec = P(batch_axes(mesh))
+    # disable replication checking: the plan body is arbitrary jnp code over
+    # closed-over (replicated) weights; the checker rejects some primitives
+    # it cannot type, and we never rely on rep types. The kwarg was renamed
+    # check_rep -> check_vma across jax versions; try both before falling
+    # back to the (checked) default.
+    for kw in ({"check_rep": False}, {"check_vma": False}, {}):
+        try:
+            return _shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec,
+                              **kw)
+        except TypeError:
+            continue
+    raise TypeError("shard_map signature not recognized")

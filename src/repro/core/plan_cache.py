@@ -17,6 +17,12 @@ compiled executable is one ``jax.vmap``ped dispatch over B same-signature
 table pytrees stacked on a leading axis — N structurally identical in-flight
 queries pay one dispatch instead of N.
 
+``get_or_compile_sharded(plan, catalog, batch_size, mesh)`` realizes the
+same micro-batch on a multi-device mesh (``backend="sharded"``): the stacked
+batch axis is ``shard_map``ped over the mesh's data axis, with automatic
+fallback to the vmapped single-device program when the batch doesn't divide
+the device count or only one device exists.
+
 ``LRUCache`` + ``CacheStats`` are the shared bounded-cache machinery (also
 used to bound the QueryEmbedder's embedding cache).
 """
@@ -91,10 +97,19 @@ def scan_table_names(plan: ir.Plan) -> tuple:
                          if isinstance(n, ir.Scan)}))
 
 
-def schema_signature(catalog: ir.Catalog) -> str:
-    """Static catalog shape: anything that changes the traced program."""
+def schema_signature(catalog: ir.Catalog,
+                     names: Optional[tuple] = None) -> str:
+    """Static catalog shape: anything that changes the traced program.
+
+    ``names`` restricts the signature to the given tables — ``PlanCache.key``
+    passes the plan's scanned tables, so catalog entries a plan never reads
+    cannot force a false cache miss (and a retrace) when they appear, change
+    shape, or disappear. ``None`` signs the whole catalog.
+    """
+    if names is None:
+        names = sorted(catalog.tables)
     parts = []
-    for name in sorted(catalog.tables):
+    for name in names:
         t = catalog.tables[name]
         cols = ",".join(f"{c}:{t.columns[c].dtype}:{t.columns[c].shape}"
                         for c in sorted(t.columns))
@@ -160,7 +175,11 @@ class PlanCache:
         return self._cache.stats
 
     def key(self, plan: ir.Plan, catalog: ir.Catalog) -> str:
-        return (plan.signature() + "@" + schema_signature(catalog)
+        # sign only the tables the plan scans: the traced program never sees
+        # the rest of the catalog, so an unrelated table must not over-key
+        # the cache into a false miss (see schema_signature)
+        return (plan.signature()
+                + "@" + schema_signature(catalog, scan_table_names(plan))
                 + "@" + registry_signature(plan))
 
     def get_or_compile(self, plan: ir.Plan, catalog: ir.Catalog,
@@ -219,15 +238,33 @@ class PlanCache:
         key = base + f"#vmap={batch_size}"
         if backend is not None:
             key = f"{key}#be={backend}"
+        return self._get_or_compile_stacked(key, plan, catalog, batch_size,
+                                            backend=backend, kind="batched")
+
+    def _get_or_compile_stacked(self, key: str, plan: ir.Plan,
+                                catalog: ir.Catalog, batch_size: int, *,
+                                backend: Optional[str], kind: str,
+                                wrap: Optional[Callable] = None):
+        """Shared body of the batched/sharded entries: stack ``batch_size``
+        same-schema table dicts on a leading axis, run the vmapped plan body
+        (optionally transformed by ``wrap``, e.g. shard_map over a mesh),
+        and unstack per-query results — all one jitted program under
+        ``key``. Keeping one implementation keeps trace accounting, payload
+        restriction to scanned tables, and the batch-size guard identical
+        across realizations."""
         fn = self._cache.get(key)
         if fn is None:
             pplan = lower(plan, catalog, backend=backend)
             names = scan_table_names(plan)
 
+            def batch_body(stacked):
+                return jax.vmap(lambda tables: ph.run(pplan, tables))(stacked)
+
+            body = wrap(batch_body) if wrap is not None else batch_body
+
             def traced(tables_seq):
                 self.traces += 1  # python side effect: runs only while tracing
-                stacked = stack_tables(list(tables_seq))
-                out = jax.vmap(lambda tables: ph.run(pplan, tables))(stacked)
+                out = body(stack_tables(list(tables_seq)))
                 return tuple(unstack_table(out, i)
                              for i in range(batch_size))
 
@@ -236,13 +273,46 @@ class PlanCache:
             def fn(tables_seq):
                 if len(tables_seq) != batch_size:
                     raise ValueError(
-                        f"batched executable compiled for batch_size="
+                        f"{kind} executable compiled for batch_size="
                         f"{batch_size}, got {len(tables_seq)} table dicts")
                 return jfn(tuple({k: t[k] for k in names}
                                  for t in tables_seq))
 
             self._cache.put(key, fn)
         return fn
+
+    def get_or_compile_sharded(self, plan: ir.Plan, catalog: ir.Catalog,
+                               batch_size: int, mesh, *,
+                               cache_key: Optional[str] = None):
+        """Multi-device variant of ``get_or_compile_batched``: the stacked
+        batch axis of the micro-batch is ``shard_map``ped over ``mesh``'s
+        data axis, so each device runs the vmapped plan body on its
+        ``batch_size / ways`` slice. The batch axis is embarrassingly
+        parallel (no cross-query communication), which is why this needs no
+        operator changes — weights and other closed-over arrays replicate.
+
+        The realization is first-class in the cache key
+        (``#be=sharded#vmap=B#mesh=...``), keeping it distinct from the
+        single-device vmapped executable of the same plan and batch size.
+        Ineligible calls — a single-device mesh, or a ``batch_size`` the
+        device count doesn't divide (``core.mesh.can_shard``, the same
+        divisibility-fitting policy as ``models.sharding``) — fall back to
+        the plain batched executable under *its* key, so fallback traffic
+        shares the existing entry instead of compiling a duplicate.
+        """
+        from repro.core import mesh as mesh_util
+
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        if not mesh_util.can_shard(mesh, batch_size):
+            return self.get_or_compile_batched(plan, catalog, batch_size,
+                                               cache_key=cache_key)
+        base = cache_key if cache_key is not None else self.key(plan, catalog)
+        key = (base + f"#be=sharded#vmap={batch_size}"
+               + f"#mesh={mesh_util.mesh_signature(mesh)}")
+        return self._get_or_compile_stacked(
+            key, plan, catalog, batch_size, backend="sharded", kind="sharded",
+            wrap=lambda body: mesh_util.shard_batch(body, mesh))
 
     def __call__(self, plan: ir.Plan, catalog: ir.Catalog) -> Table:
         """Convenience: compile-or-reuse, then execute on catalog tables."""

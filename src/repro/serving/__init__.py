@@ -5,8 +5,11 @@ cluster into a handful of structural signatures — enters through
 ``QueryServer.submit``; the micro-batch scheduler (``MicroBatcher``) groups
 in-flight requests by their ``PlanCache.key()`` signature, and the batched
 executor stacks each group's table pytrees on a leading axis and runs them
-as one ``jax.vmap``ped dispatch of the cached executable. Per-signature
-hit/latency statistics flow back into ``ReusableMCTS`` warm-starts through
+as one ``jax.vmap``ped dispatch of the cached executable — or, given a
+device mesh (``QueryServer(..., mesh=)``), as one ``shard_map``ped dispatch
+that splits the stacked batch axis over the mesh's data axis
+(``backend="sharded"``; see ``repro.core.mesh``). Per-signature hit/latency
+statistics flow back into ``ReusableMCTS`` warm-starts through
 ``repro.serving.feedback``.
 """
 from repro.serving.request import QueryRequest

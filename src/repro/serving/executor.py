@@ -1,4 +1,4 @@
-"""Batched executor: one vmapped dispatch per same-signature micro-batch.
+"""Batched executor: one dispatch per same-signature micro-batch.
 
 Feeds the batch's table pytrees to the cached executable from
 ``PlanCache.get_or_compile_batched`` (which stacks them on a leading axis,
@@ -6,6 +6,20 @@ runs the ``jax.vmap``ped plan body, and unstacks per-request results — all
 inside one jitted dispatch). Singleton batches take the plain cached
 executable — they share it with non-batched traffic, so a signature's first
 lonely request doesn't compile a B=1 vmap variant nobody else will use.
+
+With a ``mesh``, eligible batches (more than one device and a batch size the
+device count divides — ``core.mesh.can_shard``) take the *sharded*
+executable instead (``PlanCache.get_or_compile_sharded``): the stacked batch
+axis is split over the mesh's data axis, one slice per device. Ineligible
+batches fall back to the single-device vmapped program automatically. An
+explicit node-level ``backend`` override ('jnp'/'pallas') takes precedence
+over the mesh: the sharded realization lowers per-node to jnp, so honoring
+the override means not sharding.
+
+All request timestamps (``dispatch_t``, ``finish_t``) come from the
+executor's own single clock read bracketing the dispatch, so
+``finish_t - dispatch_t`` equals the measured dispatch duration exactly —
+no skew against a caller's earlier clock read.
 """
 from __future__ import annotations
 
@@ -14,6 +28,7 @@ from typing import Callable, Optional
 
 import jax
 
+from repro.core import mesh as mesh_util
 from repro.core.plan_cache import PlanCache
 from repro.serving.batcher import MicroBatch
 
@@ -21,18 +36,28 @@ from repro.serving.batcher import MicroBatch
 class BatchedExecutor:
     def __init__(self, cache: Optional[PlanCache] = None,
                  backend: Optional[str] = None,
+                 mesh=None,
                  clock: Callable[[], float] = time.monotonic):
         self.cache = cache or PlanCache()
-        self.backend = backend
+        self.backend = backend  # node-level lowering override (jnp/pallas)
+        self.mesh = mesh        # multi-device batch sharding, when eligible
         self.clock = clock  # same timebase as request timestamps
         self.dispatches = 0
         self.batched_dispatches = 0
+        self.sharded_dispatches = 0
 
-    def dispatch(self, batch: MicroBatch, now: float) -> float:
+    def dispatch(self, batch: MicroBatch) -> float:
         """Execute the micro-batch; fill each request's result. Returns the
         duration of the (blocking) dispatch on the executor's clock."""
         reqs = batch.requests
         rep = reqs[0]  # same signature => same compiled program; any member
+        # an explicit node-level backend override disables sharding: the
+        # sharded realization lowers per-node to jnp, and silently serving
+        # the same signature with different kernel realizations depending on
+        # batch size would discard the caller's choice exactly on the hot
+        # (grouped) traffic
+        sharded = (len(reqs) > 1 and self.backend is None
+                   and mesh_util.can_shard(self.mesh, len(reqs)))
         t0 = self.clock()
         if len(reqs) == 1:
             run = self.cache.get_or_compile(rep.plan, rep.catalog,
@@ -42,19 +67,27 @@ class BatchedExecutor:
             jax.block_until_ready(out)
             results = [out]
         else:
-            run = self.cache.get_or_compile_batched(rep.plan, rep.catalog,
-                                                    len(reqs),
-                                                    backend=self.backend,
-                                                    cache_key=batch.key)
+            if sharded:
+                run = self.cache.get_or_compile_sharded(
+                    rep.plan, rep.catalog, len(reqs), self.mesh,
+                    cache_key=batch.key)
+            else:
+                run = self.cache.get_or_compile_batched(
+                    rep.plan, rep.catalog, len(reqs), backend=self.backend,
+                    cache_key=batch.key)
             results = run(tuple(r.tables for r in reqs))
             jax.block_until_ready(results)
+            # counters record *completed* dispatches only — a raising
+            # dispatch is the server's failure path, not a sharded/batched one
             self.batched_dispatches += 1
+            if sharded:
+                self.sharded_dispatches += 1
         dt = self.clock() - t0
         self.dispatches += 1
         for req, res in zip(reqs, results):
             req.result = res
             req.done = True
-            req.dispatch_t = now
-            req.finish_t = now + dt
+            req.dispatch_t = t0
+            req.finish_t = t0 + dt
             req.batch_size = len(reqs)
         return dt

@@ -29,14 +29,21 @@ class SignatureExport:
     dispatches: int
     mean_occupancy: float
     mean_dispatch_s: float
+    # mean queueing delay (submit -> dispatch): signatures under batching
+    # pressure wait longer, which warm-start prioritization should see
+    mean_wait_s: float
     plan: ir.Plan
     catalog: ir.Catalog
 
     @property
     def weight(self) -> float:
-        """Traffic volume x unit latency: expected seconds this signature
-        costs the fleet, the natural priority for optimizer attention."""
-        return self.requests * max(self.mean_dispatch_s, 1e-9)
+        """Traffic volume x unit latency (dispatch + queueing): expected
+        user-visible seconds this signature costs the fleet, the natural
+        priority for optimizer attention. Queueing pressure counts — a
+        signature whose requests sit in the batcher is hurting tail latency
+        even when its dispatches are cheap."""
+        return self.requests * max(self.mean_dispatch_s + self.mean_wait_s,
+                                   1e-9)
 
 
 def export_signature_stats(server: QueryServer) -> List[SignatureExport]:
@@ -46,6 +53,7 @@ def export_signature_stats(server: QueryServer) -> List[SignatureExport]:
                         dispatches=s.dispatches,
                         mean_occupancy=s.mean_occupancy,
                         mean_dispatch_s=s.mean_dispatch_s,
+                        mean_wait_s=s.mean_wait_s,
                         plan=s.plan, catalog=s.catalog)
         for s in server.signatures.values()
         if s.plan is not None and s.dispatches > 0

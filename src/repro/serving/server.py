@@ -30,7 +30,8 @@ from repro.serving.request import QueryRequest
 class SignatureStats:
     """Per-signature serving statistics (the feedback channel's payload)."""
     key: str
-    requests: int = 0
+    requests: int = 0               # everything submitted, incl. pending
+    served_requests: int = 0        # successfully dispatched requests only
     dispatches: int = 0
     batched_requests: int = 0       # requests served in a batch of >= 2
     failures: int = 0               # requests whose dispatch raised
@@ -43,30 +44,46 @@ class SignatureStats:
 
     @property
     def mean_occupancy(self) -> float:
-        return self.requests / self.dispatches if self.dispatches else 0.0
+        # served / dispatches: pending submissions and failed batches never
+        # rode a dispatch, so counting them (as `requests` would) inflates
+        # the occupancy the MCTS feedback channel prioritizes by
+        return (self.served_requests / self.dispatches
+                if self.dispatches else 0.0)
 
     @property
     def mean_dispatch_s(self) -> float:
         return (self.total_dispatch_s / self.dispatches
                 if self.dispatches else 0.0)
 
+    @property
+    def mean_wait_s(self) -> float:
+        """Mean queueing delay (submit -> dispatch) of served requests: the
+        admission-policy pressure signal warm-start prioritization reads."""
+        return (self.total_wait_s / self.served_requests
+                if self.served_requests else 0.0)
+
     def as_dict(self) -> Dict[str, float]:
-        return {"requests": self.requests, "dispatches": self.dispatches,
+        return {"requests": self.requests,
+                "served_requests": self.served_requests,
+                "dispatches": self.dispatches,
                 "batched_requests": self.batched_requests,
                 "mean_occupancy": self.mean_occupancy,
-                "mean_dispatch_s": self.mean_dispatch_s}
+                "mean_dispatch_s": self.mean_dispatch_s,
+                "mean_wait_s": self.mean_wait_s}
 
 
 class QueryServer:
     def __init__(self, cache: Optional[PlanCache] = None,
                  max_batch_size: int = 8, max_wait_s: float = 2e-3,
-                 backend: Optional[str] = None,
+                 backend: Optional[str] = None, mesh=None,
                  clock: Callable[[], float] = time.monotonic):
         self.cache = cache or PlanCache()
         self.batcher = MicroBatcher(max_batch_size=max_batch_size,
                                     max_wait_s=max_wait_s)
+        # mesh: multi-device batch sharding — eligible micro-batches take
+        # the backend="sharded" executable (see BatchedExecutor.dispatch)
         self.executor = BatchedExecutor(self.cache, backend=backend,
-                                        clock=clock)
+                                        mesh=mesh, clock=clock)
         self.clock = clock
         self.signatures: Dict[str, SignatureStats] = {}
         self.completed = 0
@@ -125,14 +142,14 @@ class QueryServer:
     def _dispatch(self, batches) -> int:
         done = 0
         for batch in batches:
-            now = self.clock()
             sig = self.signatures[batch.key]
             try:
-                dt = self.executor.dispatch(batch, now)
+                dt = self.executor.dispatch(batch)
             except Exception as e:  # noqa: BLE001 — a bad payload (e.g.
                 # tables whose shapes disagree with the signature's schema)
                 # must fail its own batch, not hang its requests forever or
                 # take the serving loop down with them
+                now = self.clock()
                 for req in batch.requests:
                     req.done = True
                     req.error = f"{type(e).__name__}: {e}"
@@ -141,6 +158,7 @@ class QueryServer:
                 self.failed += len(batch)
                 continue
             sig.dispatches += 1
+            sig.served_requests += len(batch)
             sig.total_dispatch_s += dt
             for req in batch.requests:
                 sig.total_wait_s += req.queue_wait_s
@@ -164,6 +182,7 @@ class QueryServer:
             "signatures": len(self.signatures),
             "groups_formed": self.batcher.groups_formed,
             "dispatches": total_disp,
+            "sharded_dispatches": self.executor.sharded_dispatches,
             "mean_occupancy": (self.completed / total_disp
                                if total_disp else 0.0),
             "cache": self.cache.stats.as_dict(),

@@ -1,0 +1,138 @@
+"""Standalone sharded-equivalence checker (run in a fresh process).
+
+Proves, for every one of the 12 workload templates under a forced
+multi-device host mesh, that the three realizations of the same micro-batch
+— N sequential dispatches of the plain cached executable, one single-device
+vmapped dispatch (``get_or_compile_batched``), and one multi-device sharded
+dispatch (``get_or_compile_sharded``) — agree pairwise: valid masks and
+integer columns **exactly** (same rows survive, same keys/votes/ids), float
+columns to the 2e-5 tolerance the batched-equivalence tests established in
+PR 2. Bitwise float equality across the three is not a stable property:
+XLA fuses/reassociates reductions differently per traced batch shape (B,
+B/ways, unbatched), which perturbs a few workloads by ~1 float32 ulp —
+direction and victim vary with compiler version and thread layout.
+
+Runs as ``__main__`` in a subprocess because the 8-device host platform
+must be forced via XLA_FLAGS *before* jax initializes its backend — the
+parent pytest process has usually already initialized a 1-device CPU.
+``tests/test_serving_sharded.py`` spawns it with the right environment; it
+can also be run by hand:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python tests/sharded_equality_driver.py
+"""
+from __future__ import annotations
+
+import sys
+
+SCALE = 0.25
+BATCH = 8
+MIN_DEVICES = 8
+
+
+def check_workload(name: str, mesh, batch: int = BATCH) -> None:
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.plan_cache import PlanCache
+    from repro.data import workloads
+
+    w = workloads.ALL_WORKLOADS[name](scale=SCALE)
+    plan, catalog = w.plan, w.catalog
+    tabs = workloads.rolled_instances(dict(catalog.tables), batch)
+
+    cache = PlanCache()
+    run_seq = cache.get_or_compile(plan, catalog)
+    seq = [run_seq(t) for t in tabs]
+    bat = cache.get_or_compile_batched(plan, catalog, batch)(tuple(tabs))
+    shd = cache.get_or_compile_sharded(plan, catalog, batch, mesh)(tuple(tabs))
+
+    # the sharded entry must be its own compilation, not a fallback hit on
+    # the batched one (otherwise sharded == batched is vacuous)
+    assert cache.traces == 3, f"{name}: expected 3 traces, got {cache.traces}"
+
+    def agree(a, b, what):
+        np.testing.assert_array_equal(np.asarray(a.valid), np.asarray(b.valid),
+                                      err_msg=f"{what}.valid")
+        for k in a.columns:
+            av, bv = np.asarray(a[k]), np.asarray(b[k])
+            if np.issubdtype(av.dtype, np.floating):
+                np.testing.assert_allclose(av, bv, rtol=2e-5, atol=2e-5,
+                                           err_msg=f"{what}.{k}")
+            else:
+                np.testing.assert_array_equal(av, bv, err_msg=f"{what}.{k}")
+
+    for i in range(batch):
+        s, b, h = seq[i], bat[i], shd[i]
+        assert set(h.columns) == set(s.columns) == set(b.columns)
+        agree(h, b, f"{name}[{i}] sharded vs batched")
+        agree(h, s, f"{name}[{i}] sharded vs sequential")
+        agree(b, s, f"{name}[{i}] batched vs sequential")
+
+
+def check_server(mesh, batch: int = BATCH) -> None:
+    """The serving tier picks the sharded executable for eligible batches
+    (one full group -> one sharded dispatch, results matching the vmapped
+    program) and falls back to the batched one for a remainder the device
+    count doesn't divide."""
+    import numpy as np
+
+    from repro.core.plan_cache import PlanCache
+    from repro.data import workloads
+    from repro.serving import QueryServer
+
+    w = workloads.ALL_WORKLOADS["simple_q1"](scale=SCALE)
+    base = dict(w.catalog.tables)
+    srv = QueryServer(max_batch_size=batch, max_wait_s=3600.0, mesh=mesh)
+    reqs = [srv.submit(w.plan, w.catalog, workloads.roll_tables(base, i))
+            for i in range(batch)]
+    assert srv.step() == batch                  # one full group, one dispatch
+    assert srv.executor.sharded_dispatches == 1
+    assert all(r.done and r.error is None and r.batch_size == batch
+               for r in reqs)
+    ref_cache = PlanCache()
+    run_bat = ref_cache.get_or_compile_batched(w.plan, w.catalog, batch)
+    refs = run_bat(tuple(workloads.roll_tables(base, i)
+                         for i in range(batch)))
+    for r, ref in zip(reqs, refs):
+        np.testing.assert_array_equal(np.asarray(r.result.valid),
+                                      np.asarray(ref.valid))
+        for k in ref.columns:
+            np.testing.assert_allclose(np.asarray(r.result[k]),
+                                       np.asarray(ref[k]),
+                                       rtol=2e-5, atol=2e-5, err_msg=k)
+
+    # a 3-request remainder: 3 doesn't divide the device count -> batched
+    rest = [srv.submit(w.plan, w.catalog, workloads.roll_tables(base, i))
+            for i in range(3)]
+    assert srv.drain() == 3
+    assert all(r.done and r.error is None for r in rest)
+    assert srv.executor.sharded_dispatches == 1  # unchanged: fallback path
+    assert srv.stats()["sharded_dispatches"] == 1
+
+
+def main() -> int:
+    import jax
+
+    from repro.core import mesh as mesh_util
+    from repro.data import workloads
+
+    n = len(jax.devices())
+    if n < MIN_DEVICES:
+        print(f"FAIL: need >= {MIN_DEVICES} devices, have {n} "
+              f"(set XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+        return 2
+    mesh = mesh_util.data_mesh(MIN_DEVICES)
+    assert mesh_util.can_shard(mesh, BATCH)
+    for name in sorted(workloads.ALL_WORKLOADS):
+        check_workload(name, mesh)
+        print(f"{name}: OK", flush=True)
+    print(f"all {len(workloads.ALL_WORKLOADS)} workloads: "
+          f"sharded == batched == sequential")
+    check_server(mesh)
+    print("server: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -78,6 +78,40 @@ def test_different_structure_or_schema_misses():
     assert cache.stats.misses == 4
 
 
+def test_unscanned_catalog_table_does_not_over_key():
+    """Regression: ``PlanCache.key`` used to hash the schema of *every*
+    catalog table, so adding an unrelated table false-missed the cache and
+    retraced. The key is restricted to the plan's scanned tables: the same
+    plan over catalog +- an unscanned table is one entry, one trace."""
+    cache = PlanCache()
+    plan, cat = _mini_setup(seed=0)
+    fn1 = cache.get_or_compile(plan, cat)
+    jax.block_until_ready(fn1(dict(cat.tables)))
+    assert cache.stats.misses == 1 and cache.traces == 1
+
+    # same plan, catalog with an extra table the plan never scans
+    plan2, cat2 = _mini_setup(seed=3)
+    cat2.add("unrelated", Table.from_columns(
+        {"k": jnp.arange(5, dtype=jnp.int32)}))
+    assert schema_signature(cat) != schema_signature(cat2)  # full-catalog view
+    assert cache.key(plan, cat) == cache.key(plan2, cat2)   # restricted key
+    fn2 = cache.get_or_compile(plan2, cat2)
+    jax.block_until_ready(fn2(dict(cat2.tables)))
+    assert fn2 is fn1, "unscanned table false-missed the cache"
+    assert cache.stats.hits == 1 and cache.stats.misses == 1
+    assert cache.traces == 1, "unscanned table forced a retrace"
+    assert len(cache._cache) == 1
+
+    # removing the unrelated table again is still the same entry
+    fn3 = cache.get_or_compile(plan2, cat)
+    assert fn3 is fn1 and cache.stats.hits == 2
+
+    # but a *scanned* table's shape still keys: capacity change must miss
+    _, cat_big = _mini_setup(n=64)
+    cache.get_or_compile(plan, cat_big)
+    assert cache.stats.misses == 2
+
+
 def test_compile_plan_goes_through_cache():
     plan, cat = _mini_setup()
     cache = PlanCache()

@@ -170,6 +170,97 @@ def test_query_server_failed_dispatch_marks_requests_not_hangs():
     assert srv.completed == 1
 
 
+def test_mean_occupancy_counts_only_served_requests():
+    """Regression: occupancy used to divide *submitted* requests (including
+    still-pending ones) by dispatches, over-reporting occupancy to the MCTS
+    feedback channel whenever requests sat in the batcher."""
+    clock = FakeClock()
+    srv = QueryServer(max_batch_size=2, max_wait_s=100.0, clock=clock)
+    plan, cat = _mini(seed=0)
+    for _ in range(3):
+        srv.submit(plan, cat)
+    assert srv.step() == 2                     # full pair; third stays queued
+    sig = next(iter(srv.signatures.values()))
+    assert sig.requests == 3 and sig.served_requests == 2
+    assert sig.dispatches == 1
+    assert sig.mean_occupancy == 2.0           # not 3.0: one never rode
+    assert sig.as_dict()["mean_occupancy"] == 2.0
+    srv.drain()
+    assert sig.served_requests == 3 and sig.mean_occupancy == 1.5
+
+
+def test_mean_occupancy_ignores_failed_batches():
+    """Failed submissions never rode a dispatch either: they must not count
+    toward occupancy (they are tracked as failures instead)."""
+    srv = QueryServer(max_batch_size=4, max_wait_s=0.0)
+    plan, cat = _mini(seed=0)
+    bad_tables = {"t": Table.from_columns(
+        {"id": jnp.arange(7, dtype=jnp.int32),
+         "x": jnp.zeros((7,), jnp.float32),
+         "f": jnp.zeros((7, 8), jnp.float32)})}
+    srv.submit(plan, cat)                      # good (capacity 32) ...
+    srv.submit(plan, cat, bad_tables)          # ... + bad (7): batch fails
+    srv.drain()
+    srv.submit(plan, cat)
+    srv.drain()                                # 1 served, 1 dispatch
+    sig = next(iter(srv.signatures.values()))
+    assert sig.requests == 3 and sig.failures == 2
+    assert sig.served_requests == 1 and sig.dispatches == 1
+    assert sig.mean_occupancy == 1.0           # not 3.0
+
+
+def test_mean_wait_s_reaches_stats_and_feedback_payload():
+    """Regression: total_wait_s was accumulated but never exported — the
+    queueing-pressure signal has to reach as_dict() and the feedback
+    channel's SignatureExport for warm-start prioritization to see it."""
+    clock = FakeClock()
+    srv = QueryServer(max_batch_size=2, max_wait_s=100.0, clock=clock)
+    plan, cat = _mini(seed=0)
+    srv.submit(plan, cat)                      # submit_t = 0.0
+    clock.t = 0.5
+    srv.submit(plan, cat)                      # submit_t = 0.5, pair is full
+    assert srv.step() == 2                     # dispatches at t = 0.5
+    sig = next(iter(srv.signatures.values()))
+    assert sig.total_wait_s == pytest.approx(0.5)
+    assert sig.mean_wait_s == pytest.approx(0.25)
+    assert sig.as_dict()["mean_wait_s"] == pytest.approx(0.25)
+    exports = feedback.export_signature_stats(srv)
+    assert exports[0].mean_wait_s == pytest.approx(0.25)
+    # queueing pressure raises the signature's optimizer priority
+    assert exports[0].weight >= exports[0].requests * exports[0].mean_wait_s
+
+
+def test_dispatch_and_finish_share_one_timebase():
+    """Regression: dispatch_t used to be the *caller's* earlier clock read
+    while dt was measured from the executor's own later one, skewing
+    finish_t - dispatch_t against the measured dispatch duration. Both
+    timestamps now bracket the dispatch on the executor's clock."""
+
+    class TickingClock:
+        def __init__(self, step=0.125):
+            self.t, self.step = 0.0, step
+
+        def __call__(self):
+            self.t += self.step
+            return self.t
+
+    clock = TickingClock()
+    srv = QueryServer(max_batch_size=2, max_wait_s=1e9, clock=clock)
+    plan, cat = _mini(seed=0)
+    reqs = [srv.submit(plan, cat) for _ in range(2)]
+    assert srv.step() == 2
+    sig = next(iter(srv.signatures.values()))
+    assert sig.dispatches == 1
+    for r in reqs:
+        # the executor measured dt between its own two clock reads and
+        # stamped both ends of exactly that interval
+        assert (r.finish_t - r.dispatch_t) == pytest.approx(
+            sig.total_dispatch_s)
+        assert r.dispatch_t >= r.submit_t      # single monotonic timebase
+        assert r.queue_wait_s == pytest.approx(r.dispatch_t - r.submit_t)
+        assert r.latency_s == pytest.approx(r.finish_t - r.submit_t)
+
+
 # ---------------------------------------------------------------------------
 # feedback channel: server stats -> optimizer warm-start (fixed seeds)
 # ---------------------------------------------------------------------------

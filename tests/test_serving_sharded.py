@@ -1,0 +1,206 @@
+"""Sharded execution path: mesh utilities, eligibility/fallback policy,
+cache-key distinctness, serving-tier integration, and (via a subprocess
+with a forced 8-device host platform) sharded == batched == sequential on
+all 12 workload templates."""
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from repro.core import ir, mesh as mesh_util
+from repro.core.lowering import lower
+from repro.core import physical as ph
+from repro.core.plan_cache import PlanCache
+from repro.data import workloads
+
+SCALE = 0.25
+
+
+# ---------------------------------------------------------------------------
+# mesh utility layer
+# ---------------------------------------------------------------------------
+
+def test_data_mesh_shape_and_signature():
+    mesh = mesh_util.data_mesh()
+    assert mesh.axis_names == ("data",)
+    assert mesh_util.batch_ways(mesh) == len(jax.devices())
+    assert mesh_util.mesh_signature(mesh) == f"data={len(jax.devices())}"
+    one = mesh_util.data_mesh(1)
+    assert mesh_util.batch_ways(one) == 1
+    with pytest.raises(ValueError):
+        mesh_util.data_mesh(len(jax.devices()) + 1)
+    with pytest.raises(ValueError):
+        mesh_util.data_mesh(0)
+    with pytest.raises(ValueError):
+        # an unrecognized axis name would silently never shard anything
+        mesh_util.data_mesh(1, axis="batch")
+
+
+def test_can_shard_policy():
+    """Eligibility == models.sharding's divisibility-fitting policy AND more
+    than one device: single-device meshes and non-dividing batch sizes are
+    never sharded."""
+    assert not mesh_util.can_shard(None, 8)
+    one = mesh_util.data_mesh(1)
+    assert not mesh_util.can_shard(one, 8)       # 1 device: nothing to split
+    if len(jax.devices()) >= 2:
+        two = mesh_util.data_mesh(2)
+        assert mesh_util.can_shard(two, 4)       # 4 % 2 == 0
+        assert not mesh_util.can_shard(two, 3)   # 3 % 2 != 0
+        assert not mesh_util.can_shard(two, 1)   # batch < ways
+
+
+def test_lower_sharded_backend_resolves_nodes_to_jnp():
+    """backend='sharded' is a plan-level realization: per-node it must
+    resolve to the pure-XLA path (each device runs an ordinary program on
+    its slice), overriding even an explicit pallas annotation."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.mlfuncs.functions import Atom, MLGraph, MLNode, MLFunction
+    from repro.mlfuncs.registry import Registry
+    from repro.relational.table import Table
+
+    rng = np.random.default_rng(0)
+    t = Table.from_columns({
+        "id": jnp.arange(8, dtype=jnp.int32),
+        "f": jnp.asarray(rng.standard_normal((8, 4)), jnp.float32)})
+    cat = ir.Catalog()
+    cat.add("t", t)
+    reg = Registry()
+    w = rng.standard_normal((4, 4)).astype(np.float32)
+    reg.register(MLFunction("mm", graph=MLGraph(
+        [MLNode(0, Atom("matmul", {"w": w}), (("in", 0),))], 0, 1)))
+    bm = ir.BlockedMatmul(ir.Scan("t"), x_col="f", out_col="y", fn="mm")
+    plan = ir.Plan(bm, reg, phys={
+        bm.uid: ir.PhysConfig(mode="fused", backend="pallas", n_tiles=2)})
+    pplan = lower(plan, cat, backend="sharded")
+    (node,) = [n for n in _walk_phys(pplan.root)
+               if isinstance(n, ph.PBlockedMatmul)]
+    assert node.backend == "jnp"
+    # mode and tiling annotations survive the backend override
+    assert node.mode == "fused" and node.n_tiles == 2
+
+
+def _walk_phys(node):
+    yield node
+    for c in node.children():
+        yield from _walk_phys(c)
+
+
+# ---------------------------------------------------------------------------
+# plan-cache sharded entry: fallback + key distinctness
+# ---------------------------------------------------------------------------
+
+def test_sharded_ineligible_falls_back_to_batched_entry():
+    """A single-device mesh (or a batch the device count doesn't divide)
+    must reuse the *batched* executable under its own key — no duplicate
+    compilation, no phantom sharded cache entry."""
+    w = workloads.ALL_WORKLOADS["simple_q1"](scale=SCALE)
+    cache = PlanCache()
+    mesh = mesh_util.data_mesh(1)
+    fb = cache.get_or_compile_sharded(w.plan, w.catalog, 2, mesh)
+    assert cache.stats.misses == 1 and len(cache._cache) == 1
+    f2 = cache.get_or_compile_batched(w.plan, w.catalog, 2)
+    assert f2 is fb and cache.stats.hits == 1
+    # the fallback really executes: results match the sequential program
+    tabs = workloads.rolled_instances(dict(w.catalog.tables), 2)
+    outs = fb(tuple(tabs))
+    assert len(outs) == 2
+    with pytest.raises(ValueError):
+        cache.get_or_compile_sharded(w.plan, w.catalog, 0, mesh)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2, reason="needs >= 2 devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+def test_sharded_key_is_first_class():
+    """An eligible mesh compiles a distinct executable whose key records
+    backend=sharded + mesh shape; same mesh shape re-hits it."""
+    w = workloads.ALL_WORKLOADS["simple_q1"](scale=SCALE)
+    cache = PlanCache()
+    mesh = mesh_util.data_mesh(2)
+    fsh = cache.get_or_compile_sharded(w.plan, w.catalog, 2, mesh)
+    fbat = cache.get_or_compile_batched(w.plan, w.catalog, 2)
+    assert fsh is not fbat and cache.stats.misses == 2
+    assert any("#be=sharded" in k and "#mesh=data=2" in k
+               for k in cache._cache._data)
+    again = cache.get_or_compile_sharded(w.plan, w.catalog, 2,
+                                         mesh_util.data_mesh(2))
+    assert again is fsh and cache.stats.hits == 1
+    with pytest.raises(ValueError):
+        fsh(tuple(workloads.rolled_instances(dict(w.catalog.tables), 3)))
+
+
+# ---------------------------------------------------------------------------
+# serving tier without a mesh: nothing shards
+# ---------------------------------------------------------------------------
+
+def test_server_without_mesh_never_shards():
+    from repro.serving import QueryServer
+    w = workloads.ALL_WORKLOADS["simple_q1"](scale=SCALE)
+    srv = QueryServer(max_batch_size=2, max_wait_s=3600.0)
+    base = dict(w.catalog.tables)
+    for i in range(2):
+        srv.submit(w.plan, w.catalog, workloads.roll_tables(base, i))
+    assert srv.step() == 2
+    st = srv.stats()
+    assert st["sharded_dispatches"] == 0 and st["dispatches"] == 1
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2, reason="needs >= 2 devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+def test_explicit_backend_override_disables_sharding():
+    """backend='jnp'/'pallas' is an explicit node-level kernel choice; the
+    sharded realization lowers per-node to jnp, so a mesh must not silently
+    override the caller's backend on grouped traffic."""
+    from repro.serving import QueryServer
+    w = workloads.ALL_WORKLOADS["simple_q1"](scale=SCALE)
+    mesh = mesh_util.data_mesh(2)
+    srv = QueryServer(max_batch_size=2, max_wait_s=3600.0,
+                      backend="jnp", mesh=mesh)
+    base = dict(w.catalog.tables)
+    reqs = [srv.submit(w.plan, w.catalog, workloads.roll_tables(base, i))
+            for i in range(2)]
+    assert srv.step() == 2
+    assert all(r.done and r.error is None for r in reqs)
+    st = srv.stats()
+    assert st["sharded_dispatches"] == 0 and st["dispatches"] == 1
+    # the compiled entry carries the override, not the sharded realization
+    assert any("#be=jnp" in k for k in srv.cache._cache._data)
+    assert not any("#be=sharded" in k for k in srv.cache._cache._data)
+
+
+# ---------------------------------------------------------------------------
+# the full multi-device proof, in a fresh 8-device process
+# ---------------------------------------------------------------------------
+
+def _forced_device_env(n: int = 8):
+    env = dict(os.environ)
+    flags = [t for t in env.get("XLA_FLAGS", "").split()
+             if "--xla_force_host_platform_device_count" not in t]
+    flags.append(f"--xla_force_host_platform_device_count={n}")
+    env["XLA_FLAGS"] = " ".join(flags)
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    return env
+
+
+def test_sharded_equals_batched_and_sequential_all_workloads_8dev():
+    """Spawns ``tests/sharded_equality_driver.py`` under a forced 8-device
+    host platform (the parent process has usually already initialized a
+    1-device jax backend, so the flag must be set in a fresh process): on
+    every workload the sharded, vmapped, and sequential realizations agree
+    pairwise — masks and integer columns exactly, float columns to the
+    established vmap-fusion tolerance — and the serving tier picks the
+    sharded executable for eligible batches and falls back for the rest."""
+    driver = os.path.join(os.path.dirname(__file__),
+                          "sharded_equality_driver.py")
+    proc = subprocess.run([sys.executable, driver], env=_forced_device_env(),
+                          capture_output=True, text=True, timeout=1500)
+    assert proc.returncode == 0, (
+        f"driver failed\nstdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
+    assert "all 12 workloads" in proc.stdout
+    assert "server: OK" in proc.stdout
