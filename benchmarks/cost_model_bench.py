@@ -1,0 +1,91 @@
+"""Cost-oracle accuracy: predicted vs measured seconds per workload.
+
+For each workload the analytic oracle's prediction (``cost.plan_cost`` of
+the costed-lowered physical plan, detected profile) is compared against the
+measured warm dispatch wall-clock of the compiled executable. The summary
+(exported into ``benchmarks.run --json`` as the ``cost_model`` section)
+tracks the mean absolute percentage error (MAPE) across PRs, plus the MAPE
+after one round of ``fit_profile`` calibration on the same measurements —
+the gap between the two is what the serving feedback loop can recover
+online. Costed-vs-tree-order lowering gains are reported per workload (the
+oracle's *decisions*, not just its absolute accuracy).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List
+
+import jax
+
+from repro.core import cost
+from repro.core.lowering import lower
+from repro.core import physical as ph
+from repro.core.plan_cache import PlanCache
+from repro.data import workloads
+from benchmarks.common import best_time, csv_line
+
+QUICK_QUERIES = ["rec_q1", "rec_q2", "retail_q1", "simple_q2"]
+
+# populated by run(); benchmarks.run lifts it into the JSON summary
+LAST_SUMMARY: Dict[str, object] = {}
+
+
+def run(scale: float = 0.5, repeats: int = 7,
+        queries: Iterable[str] | None = None) -> List[str]:
+    global LAST_SUMMARY
+    lines: List[str] = []
+    profile = cost.DeviceProfile.detect()
+    cache = PlanCache(profile=profile)
+    per_workload: Dict[str, Dict[str, float]] = {}
+    samples = []
+    for name in (sorted(workloads.ALL_WORKLOADS) if queries is None
+                 else list(queries)):
+        w = workloads.ALL_WORKLOADS[name](scale=scale)
+        pplan = lower(w.plan, w.catalog, profile=profile)
+        predicted = cost.plan_cost(pplan, w.catalog, profile)
+        tree_cost = cost.plan_cost(lower(w.plan, w.catalog, costed=False),
+                                   w.catalog, profile)
+        tables = dict(w.catalog.tables)
+        fn = cache.get_or_compile(w.plan, w.catalog)
+        measured = best_time(lambda: fn(tables), repeats=repeats)
+        err = abs(predicted - measured) / max(measured, 1e-12)
+        per_workload[name] = {
+            "predicted_s": predicted, "measured_s": measured,
+            "tree_order_s": tree_cost,
+            "costed_gain": tree_cost / max(predicted, 1e-12),
+            "ape": err,
+        }
+        # breakdown of the *costed* physical plan: the features must
+        # describe the executable that was actually timed
+        samples.append((cost.plan_cost_breakdown(pplan, w.catalog, profile),
+                        measured, 1.0))
+        lines.append(csv_line(
+            f"cost/{name}", measured * 1e6,
+            f"predicted_us={predicted * 1e6:.1f} "
+            f"ratio={predicted / max(measured, 1e-12):.2f} "
+            f"costed_gain={tree_cost / max(predicted, 1e-12):.3f}x"))
+    fit = cost.fit_profile(samples, profile)
+    mape = (sum(v["ape"] for v in per_workload.values())
+            / max(len(per_workload), 1))
+    lines.append(csv_line(
+        "cost/calibration", 0.0,
+        f"mape={mape:.3f} mape_calibrated={fit.mape_after:.3f} "
+        f"n={fit.n_samples} profile={profile.name}"))
+    LAST_SUMMARY = {
+        "profile": profile.name,
+        "scale": scale,
+        "per_workload": per_workload,
+        "mape": mape,
+        "mape_linearized": fit.mape_before,
+        "mape_calibrated": fit.mape_after,
+        "calibrated_profile": {
+            "peak_flops": fit.profile.peak_flops,
+            "hbm_bw": fit.profile.hbm_bw,
+            "op_overhead_s": fit.profile.op_overhead_s,
+        },
+    }
+    return lines
+
+
+if __name__ == "__main__":
+    for ln in run():
+        print(ln)

@@ -26,14 +26,19 @@ def main() -> None:
     args = ap.parse_args()
     q = args.quick
 
-    from benchmarks import (ablation, complex_queries, kernels_bench,
-                            optimizers, plan_cache_bench, random_queries,
-                            roofline, serving_bench, sharded_bench,
-                            simplified_analytics)
+    from benchmarks import (ablation, complex_queries, cost_model_bench,
+                            kernels_bench, optimizers, plan_cache_bench,
+                            random_queries, roofline, serving_bench,
+                            sharded_bench, simplified_analytics)
 
     suites = {
         "kernels": lambda: kernels_bench.run(),
         "plan_cache": lambda: plan_cache_bench.run(scale=0.3 if q else 0.5),
+        # cost-oracle accuracy: predicted vs measured + calibration error;
+        # the JSON summary gains a `cost_model` section from this suite
+        "cost": lambda: cost_model_bench.run(
+            scale=0.3 if q else 0.5, repeats=5 if q else 9,
+            queries=cost_model_bench.QUICK_QUERIES if q else None),
         "serving": lambda: serving_bench.run(
             scale=0.08, batch_sizes=(1, 2, 8, 16) if q else (1, 2, 4, 8, 16),
             mix_requests=21 if q else 42, repeats=7 if q else 15),
@@ -87,6 +92,9 @@ def main() -> None:
                     "us_per_call": float(parts[1]) if len(parts) > 1 else None,
                     "derived": parts[2] if len(parts) > 2 else ""})
             summary["suites"][name] = round(time.time() - t0, 1)
+            if name == "cost":
+                # oracle-accuracy tracking across PRs (BENCH_*.json)
+                summary["cost_model"] = cost_model_bench.LAST_SUMMARY
             print(f"# suite {name} done in {time.time() - t0:.1f}s",
                   file=sys.stderr)
         except Exception:

@@ -1,18 +1,29 @@
-"""Analytic cost model for physical plans.
+"""Analytic cost model — the single cost oracle of the stack.
 
-Costs each node by FLOPs + bytes moved against a device profile, walking the
-plan with the cardinality/capacity estimates from ir.infer. On TPU the
-*capacity* (static shape) drives cost, not the live-row count — which is
-exactly why compaction after selective filters matters (DESIGN.md Sec. 2).
+Every component that needs a notion of "cheap" routes through ``plan_cost``:
+the MCTS reward oracle (``planner.analytic_cost_fn`` / ``mcts.VanillaMCTS``),
+costed lowering (``core.costed_lowering`` scores physical candidates), the
+serving tier's batch-realization choice (``batched_plan_cost``), and the
+online feedback calibration (``fit_profile`` refits a ``DeviceProfile``
+against measured dispatch latencies). ``plan_cost`` accepts both the logical
+``ir.Plan`` and the physical ``physical.PhysicalPlan``; both walks share the
+same per-operator ``OpCost`` kernels, so there is exactly one set of cost
+formulas (a tree-order-lowered physical plan costs bit-identically to its
+logical tree).
 
-This model is the MCTS reward oracle for fast/deterministic paths; the
-learned latency predictor (core.embedding) plays the paper's Query2Vec role
-and is trained against measured wall-clock of compiled plans.
+Costs each operator by FLOPs + bytes moved against a device profile, using
+capacity (static shape) rather than live-row counts — on TPU the *capacity*
+drives cost, which is exactly why compaction after selective filters matters
+(DESIGN.md Sec. 2). The learned latency predictor (core.embedding) plays the
+paper's Query2Vec role and is trained against measured wall-clock of
+compiled plans; it is deliberately a separate estimator.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Mapping, Optional
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core import ir
 from repro.mlfuncs.registry import Registry
@@ -29,100 +40,216 @@ class DeviceProfile:
     elem_bytes: int = 4
     # fixed overhead per relational operator (dispatch/fusion boundary)
     op_overhead_s: float = 2e-6
+    # per-shard fan-in/out overhead of a multi-device (sharded) dispatch
+    collective_overhead_s: float = 0.0
+    # whether the pallas kernel realizations are executable on this device
+    supports_pallas: bool = True
 
+    def signature(self) -> str:
+        """Calibratable-field token: anything the feedback loop can move.
+        Two profiles with equal signatures make identical lowering
+        decisions. (PlanCache invalidates its decision memos via
+        ``profile_epoch``, bumped by ``recalibrate()`` — mutating a
+        profile's fields in place does NOT re-derive decisions.)"""
+        return (f"{self.name}:pf={self.peak_flops:.4e},bw={self.hbm_bw:.4e},"
+                f"vb={self.vmem_bw:.4e},ov={self.op_overhead_s:.4e},"
+                f"co={self.collective_overhead_s:.4e}")
+
+    @classmethod
+    def detect(cls) -> "DeviceProfile":
+        """A fresh profile for the host's JAX backend.
+
+        Returns a *copy* (profiles are mutable calibration targets; the
+        module singletons below are priors, never calibrated in place).
+        """
+        import jax
+        backend = jax.default_backend()
+        if backend == "tpu":
+            prior = TPU_PROFILE
+        elif backend in ("gpu", "cuda", "rocm"):
+            prior = GPU_PROFILE
+        else:
+            prior = CPU_PROFILE
+        return dataclasses.replace(prior)
+
+
+TPU_PROFILE = DeviceProfile()
+
+GPU_PROFILE = DeviceProfile(name="gpu-a100", peak_flops=312e12,
+                            hbm_bw=1.55e12, vmem_bw=5.0e12,
+                            op_overhead_s=3e-6, supports_pallas=False)
 
 CPU_PROFILE = DeviceProfile(name="cpu", peak_flops=2e11, hbm_bw=3e10,
-                            vmem_bw=2e11, op_overhead_s=5e-6)
+                            vmem_bw=2e11, op_overhead_s=5e-6,
+                            supports_pallas=False)
+
+_DETECTED: Optional[DeviceProfile] = None
+
+
+def default_profile() -> DeviceProfile:
+    """Process-wide detected profile (lazy, computed once). Default for
+    every ``plan_cost`` entry that is not handed an explicit profile."""
+    global _DETECTED
+    if _DETECTED is None:
+        _DETECTED = DeviceProfile.detect()
+    return _DETECTED
+
+
+# ---------------------------------------------------------------------------
+# per-operator cost kernels
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class OpCost:
+    """One physical operator's resource footprint, device-independent.
+
+    ``data_bytes`` scale with the data/batch axis (a B-query vmapped
+    dispatch moves B x data_bytes); ``param_bytes`` are weight traffic,
+    streamed once per dispatch and replicated across shards. ``n_ops``
+    counts dispatch/fusion-boundary overhead units (``op_overhead_s``).
+    """
+    label: str
+    flops: float = 0.0
+    data_bytes: float = 0.0
+    param_bytes: float = 0.0
+    bw: str = "hbm"              # 'hbm' | 'vmem' (pallas-fused operators)
+    n_ops: int = 1
+
+
+def op_time(oc: OpCost, profile: DeviceProfile, data_scale: float = 1.0) -> float:
+    """Roofline time of one operator: max(compute, traffic) + overhead."""
+    bw = profile.vmem_bw if oc.bw == "vmem" else profile.hbm_bw
+    return (max(oc.flops * data_scale / profile.peak_flops,
+                (oc.data_bytes * data_scale + oc.param_bytes) / bw)
+            + oc.n_ops * profile.op_overhead_s)
 
 
 def _row_bytes(schema: Dict[str, int], profile: DeviceProfile) -> float:
     return sum(max(d, 1) for d in schema.values()) * profile.elem_bytes
 
 
-def _time(flops: float, bytes_: float, profile: DeviceProfile) -> float:
-    return max(flops / profile.peak_flops, bytes_ / profile.hbm_bw) + profile.op_overhead_s
+def _filter_cost(pred_flops: float, schema, capacity, profile) -> OpCost:
+    return OpCost("filter", flops=pred_flops * capacity,
+                  data_bytes=_row_bytes(schema, profile) * capacity)
 
+
+def _compact_cost(schema, cap_in, cap_out, profile) -> OpCost:
+    return OpCost("compact", flops=cap_in * 8.0,  # sort + gather
+                  data_bytes=_row_bytes(schema, profile) * (cap_in + cap_out))
+
+
+def _project_cost(expr_flops: float, in_schema, out_schema, param_bytes,
+                  capacity, profile) -> OpCost:
+    by = (_row_bytes(in_schema, profile)
+          + _row_bytes(out_schema, profile)) * capacity
+    return OpCost("project", flops=expr_flops * capacity, data_bytes=by,
+                  param_bytes=param_bytes)
+
+
+def _join_cost(l_schema, l_cap, r_schema, r_cap, out_schema, out_cap,
+               profile) -> OpCost:
+    fl = (l_cap + r_cap) * 32.0  # sort/searchsorted
+    by = (_row_bytes(l_schema, profile) * l_cap
+          + _row_bytes(r_schema, profile) * r_cap
+          + _row_bytes(out_schema, profile) * out_cap)
+    return OpCost("join", flops=fl, data_bytes=by)
+
+
+def _crossjoin_cost(out_schema, out_cap, profile) -> OpCost:
+    return OpCost("crossjoin", flops=out_cap * 2.0,
+                  data_bytes=2.0 * _row_bytes(out_schema, profile) * out_cap)
+
+
+def _aggregate_cost(schema, capacity, n_aggs, profile) -> OpCost:
+    return OpCost("aggregate", flops=capacity * (16.0 + 2.0 * n_aggs),
+                  data_bytes=_row_bytes(schema, profile) * capacity)
+
+
+def _matmul_cost(fn, x_dim, capacity, cfg: ir.PhysConfig, profile) -> OpCost:
+    fl = fn.flops_per_row([x_dim]) * capacity
+    pb = fn.param_bytes()
+    xby = max(x_dim, 1) * profile.elem_bytes * capacity
+    extra = 0
+    if cfg.mode == "relational":
+        # streamed tile scan: x re-read per tile + per-tile op overhead
+        xby *= cfg.n_tiles
+        extra = cfg.n_tiles
+    return OpCost("matmul", flops=fl, data_bytes=2 * xby, param_bytes=pb,
+                  bw="vmem" if cfg.backend == "pallas" else "hbm",
+                  n_ops=1 + extra)
+
+
+def _forest_cost(fn, x_dim, capacity, cfg: ir.PhysConfig, profile) -> OpCost:
+    fl = fn.flops_per_row([x_dim]) * capacity
+    pb = fn.param_bytes()
+    xby = max(x_dim, 1) * profile.elem_bytes * capacity
+    if cfg.mode == "relational":
+        p = fn.graph.nodes[0].atom.params
+        xby *= p["feat"].shape[0]  # x re-read once per streamed tree
+    return OpCost("forest", flops=fl, data_bytes=xby, param_bytes=pb,
+                  bw="vmem" if cfg.backend == "pallas" else "hbm")
+
+
+# ---------------------------------------------------------------------------
+# logical-plan walk
+# ---------------------------------------------------------------------------
 
 def node_cost(node: ir.RelNode, registry: Registry, catalog: ir.Catalog,
               profile: DeviceProfile, phys: PhysMap = None) -> float:
     """Recursive total plan cost in seconds (analytic)."""
     total = sum(node_cost(c, registry, catalog, profile, phys)
                 for c in node.children())
-    total += _local_cost(node, registry, catalog, profile, phys)
+    oc = _node_op_cost(node, registry, catalog, profile, phys)
+    if oc is not None:
+        total += op_time(oc, profile)
     return total
 
 
-def _local_cost(node: ir.RelNode, registry: Registry, catalog: ir.Catalog,
-                profile: DeviceProfile, phys: PhysMap = None) -> float:
+def _node_op_cost(node: ir.RelNode, registry: Registry, catalog: ir.Catalog,
+                  profile: DeviceProfile, phys: PhysMap = None
+                  ) -> Optional[OpCost]:
     if isinstance(node, ir.Scan):
-        return 0.0
+        return None
     if isinstance(node, ir.Filter):
         ci = ir.infer(node.child, registry, catalog)
-        fl = ir.expr_flops(node.pred, ci.schema, registry) * ci.capacity
-        by = _row_bytes(ci.schema, profile) * ci.capacity
-        return _time(fl, by, profile)
+        return _filter_cost(ir.expr_flops(node.pred, ci.schema, registry),
+                            ci.schema, ci.capacity, profile)
     if isinstance(node, ir.Compact):
         ci = ir.infer(node.child, registry, catalog)
-        by = _row_bytes(ci.schema, profile) * (ci.capacity + node.capacity)
-        return _time(ci.capacity * 8.0, by, profile)  # sort + gather
+        return _compact_cost(ci.schema, ci.capacity, node.capacity, profile)
     if isinstance(node, ir.Project):
         ci = ir.infer(node.child, registry, catalog)
         fl = sum(ir.expr_flops(e, ci.schema, registry) for _, e in node.outputs)
-        fl *= ci.capacity
         out = ir.infer(node, registry, catalog)
-        by = (_row_bytes(ci.schema, profile) + _row_bytes(out.schema, profile)) * ci.capacity
         # parameter traffic: weights stream from HBM once per call
         pb = 0.0
         for _, e in node.outputs:
             for c in _calls(e):
                 pb += registry.get(c.fn).param_bytes()
-        return _time(fl, by + pb, profile)
+        return _project_cost(fl, ci.schema, out.schema, pb, ci.capacity,
+                             profile)
     if isinstance(node, ir.Join):
         li = ir.infer(node.left, registry, catalog)
         ri = ir.infer(node.right, registry, catalog)
         out = ir.infer(node, registry, catalog)
-        fl = (li.capacity + ri.capacity) * 32.0  # sort/searchsorted
-        by = (_row_bytes(li.schema, profile) * li.capacity
-              + _row_bytes(ri.schema, profile) * ri.capacity
-              + _row_bytes(out.schema, profile) * out.capacity)
-        return _time(fl, by, profile)
+        return _join_cost(li.schema, li.capacity, ri.schema, ri.capacity,
+                          out.schema, out.capacity, profile)
     if isinstance(node, ir.CrossJoin):
         out = ir.infer(node, registry, catalog)
-        by = 2.0 * _row_bytes(out.schema, profile) * out.capacity
-        return _time(out.capacity * 2.0, by, profile)
+        return _crossjoin_cost(out.schema, out.capacity, profile)
     if isinstance(node, ir.Aggregate):
         ci = ir.infer(node.child, registry, catalog)
-        fl = ci.capacity * (16.0 + 2.0 * len(node.aggs))
-        by = _row_bytes(ci.schema, profile) * ci.capacity
-        return _time(fl, by, profile)
+        return _aggregate_cost(ci.schema, ci.capacity, len(node.aggs), profile)
     if isinstance(node, ir.BlockedMatmul):
         ci = ir.infer(node.child, registry, catalog)
-        fn = registry.get(node.fn)
-        pc = ir.resolve_phys(node, phys, registry)
-        fl = fn.flops_per_row([ci.schema[node.x_col]]) * ci.capacity
-        pb = fn.param_bytes()
-        xby = max(ci.schema[node.x_col], 1) * profile.elem_bytes * ci.capacity
-        if pc.mode == "relational":
-            # streamed tile scan: x re-read per tile + per-tile op overhead
-            xby *= pc.n_tiles
-            extra = pc.n_tiles * profile.op_overhead_s
-        else:
-            extra = 0.0
-        bw = profile.vmem_bw if pc.backend == "pallas" else profile.hbm_bw
-        t = max(fl / profile.peak_flops, (pb + 2 * xby) / bw)
-        return t + profile.op_overhead_s + extra
+        return _matmul_cost(registry.get(node.fn), ci.schema[node.x_col],
+                            ci.capacity, ir.resolve_phys(node, phys, registry),
+                            profile)
     if isinstance(node, ir.ForestRelational):
         ci = ir.infer(node.child, registry, catalog)
-        fn = registry.get(node.fn)
-        pc = ir.resolve_phys(node, phys, registry)
-        fl = fn.flops_per_row([ci.schema[node.x_col]]) * ci.capacity
-        pb = fn.param_bytes()
-        xby = max(ci.schema[node.x_col], 1) * profile.elem_bytes * ci.capacity
-        if pc.mode == "relational":
-            p = fn.graph.nodes[0].atom.params
-            xby *= p["feat"].shape[0]
-        bw = profile.vmem_bw if pc.backend == "pallas" else profile.hbm_bw
-        return max(fl / profile.peak_flops, (pb + xby) / bw) + profile.op_overhead_s
+        return _forest_cost(registry.get(node.fn), ci.schema[node.x_col],
+                            ci.capacity, ir.resolve_phys(node, phys, registry),
+                            profile)
     raise TypeError(type(node))
 
 
@@ -131,6 +258,189 @@ def _calls(e: ir.Expr):
         yield e
     for c in e.children():
         yield from _calls(c)
+
+
+# ---------------------------------------------------------------------------
+# physical-plan walk (costed lowering's candidate scorer)
+# ---------------------------------------------------------------------------
+
+def _stage_info(stage, schema: Dict[str, int], capacity: int,
+                registry: Registry) -> Tuple[Dict[str, int], int]:
+    """Schema/capacity after one pipeline stage (exact, statically known)."""
+    from repro.core import physical as ph
+    if isinstance(stage, ph.FilterStage):
+        return schema, capacity
+    if isinstance(stage, ph.CompactStage):
+        return schema, stage.capacity
+    if isinstance(stage, ph.ProjectStage):
+        out = (dict(schema) if stage.keep is None
+               else {k: schema[k] for k in stage.keep})
+        for name, e in stage.outputs:
+            out[name] = ir.expr_dim(e, schema, registry)
+        return out, capacity
+    raise TypeError(type(stage))
+
+
+def _derive_info(node, registry: Registry, catalog: ir.Catalog,
+                 child_infos) -> Tuple[Dict[str, int], int]:
+    """(schema, capacity) of a physical node's output from its children's
+    already-computed infos — single level, so walks that visit each node
+    once stay linear in plan size."""
+    from repro.core import physical as ph
+    if isinstance(node, ph.PScan):
+        st = catalog.stats[node.table]
+        return {c: s.dim for c, s in st.columns.items()}, st.capacity
+    if isinstance(node, ph.PPipeline):
+        schema, cap = child_infos[0]
+        for stage in node.stages:
+            schema, cap = _stage_info(stage, schema, cap, registry)
+        return schema, cap
+    if isinstance(node, ph.PJoin):
+        (ls, lc), (rs, _) = child_infos
+        schema = dict(ls)
+        for c, d in rs.items():
+            out = node.rprefix + c
+            if out == node.left_key and c == node.right_key:
+                continue
+            schema[out] = d
+        return schema, lc
+    if isinstance(node, ph.PCrossJoin):
+        (ls, lc), (rs, rc) = child_infos
+        schema = {node.aprefix + c: d for c, d in ls.items()}
+        schema.update({node.bprefix + c: d for c, d in rs.items()})
+        return schema, lc * rc
+    if isinstance(node, ph.PAggregate):
+        cs, _ = child_infos[0]
+        schema = {node.key: 0}
+        for out, (kind, in_col) in node.aggs:
+            schema[out] = 0 if kind == "count" else cs.get(in_col, 0)
+        return schema, node.num_groups
+    if isinstance(node, ph.PBlockedMatmul):
+        cs, cc = child_infos[0]
+        schema = dict(cs) if node.keep is None else {k: cs[k] for k in node.keep}
+        schema[node.out_col] = registry.get(node.fn).out_dim([cs[node.x_col]])
+        return schema, cc
+    if isinstance(node, ph.PForestRelational):
+        cs, cc = child_infos[0]
+        schema = dict(cs) if node.keep is None else {k: cs[k] for k in node.keep}
+        schema[node.out_col] = 0
+        return schema, cc
+    raise TypeError(type(node))
+
+
+def phys_node_info(node, registry: Registry, catalog: ir.Catalog
+                   ) -> Tuple[Dict[str, int], int]:
+    """(schema, capacity) of a physical node's output — the physical mirror
+    of ``ir.infer`` without row estimates (cost is capacity-driven)."""
+    return _derive_info(node, registry, catalog,
+                        tuple(phys_node_info(c, registry, catalog)
+                              for c in node.children()))
+
+
+def phys_op_costs(pplan, catalog: ir.Catalog,
+                  profile: DeviceProfile) -> List[OpCost]:
+    """Per-operator OpCosts of a physical plan, through the same kernels as
+    the logical walk (tree-order lowering costs identically either way)."""
+    from repro.core import physical as ph
+    registry = pplan.registry
+    out: List[OpCost] = []
+
+    def visit(node) -> Tuple[Dict[str, int], int]:
+        child_infos = tuple(visit(c) for c in node.children())
+        if isinstance(node, ph.PPipeline):
+            schema, cap = child_infos[0]
+            for stage in node.stages:
+                nxt = _stage_info(stage, schema, cap, registry)
+                if isinstance(stage, ph.FilterStage):
+                    out.append(_filter_cost(
+                        ir.expr_flops(stage.pred, schema, registry),
+                        schema, cap, profile))
+                elif isinstance(stage, ph.CompactStage):
+                    out.append(_compact_cost(schema, cap, stage.capacity,
+                                             profile))
+                elif isinstance(stage, ph.ProjectStage):
+                    fl = sum(ir.expr_flops(e, schema, registry)
+                             for _, e in stage.outputs)
+                    pb = 0.0
+                    for _, e in stage.outputs:
+                        for c in _calls(e):
+                            pb += registry.get(c.fn).param_bytes()
+                    out.append(_project_cost(fl, schema, nxt[0], pb, cap,
+                                             profile))
+                schema, cap = nxt
+            return schema, cap
+        info = _derive_info(node, registry, catalog, child_infos)
+        if isinstance(node, ph.PJoin):
+            (ls, lc), (rs, rc) = child_infos
+            out.append(_join_cost(ls, lc, rs, rc, info[0], info[1], profile))
+        elif isinstance(node, ph.PCrossJoin):
+            out.append(_crossjoin_cost(info[0], info[1], profile))
+        elif isinstance(node, ph.PAggregate):
+            cs, cc = child_infos[0]
+            out.append(_aggregate_cost(cs, cc, len(node.aggs), profile))
+        elif isinstance(node, ph.PBlockedMatmul):
+            cs, cc = child_infos[0]
+            cfg = ir.PhysConfig(mode=node.mode, backend=node.backend,
+                                n_tiles=node.n_tiles)
+            out.append(_matmul_cost(registry.get(node.fn), cs[node.x_col],
+                                    cc, cfg, profile))
+        elif isinstance(node, ph.PForestRelational):
+            cs, cc = child_infos[0]
+            cfg = ir.PhysConfig(mode=node.mode, backend=node.backend)
+            out.append(_forest_cost(registry.get(node.fn), cs[node.x_col],
+                                    cc, cfg, profile))
+        elif not isinstance(node, ph.PScan):
+            raise TypeError(type(node))
+        return info
+
+    visit(pplan.root)
+    return out
+
+
+def phys_peak_memory(pplan, catalog: ir.Catalog,
+                     profile: DeviceProfile) -> float:
+    """Peak working set of a physical plan (max across operators), the
+    physical mirror of ``node_mem``."""
+    from repro.core import physical as ph
+    registry = pplan.registry
+    peak = 0.0
+
+    def base(schema, cap) -> float:
+        return _row_bytes(schema, profile) * cap
+
+    def visit(node) -> Tuple[Dict[str, int], int]:
+        nonlocal peak
+        child_infos = tuple(visit(c) for c in node.children())
+        if isinstance(node, ph.PScan):
+            schema, cap = _derive_info(node, registry, catalog, child_infos)
+            peak = max(peak, base(schema, cap))
+            return schema, cap
+        if isinstance(node, ph.PPipeline):
+            schema, cap = child_infos[0]
+            for stage in node.stages:
+                schema, cap = _stage_info(stage, schema, cap, registry)
+                m = base(schema, cap)
+                if isinstance(stage, ph.ProjectStage):
+                    for _, e in stage.outputs:
+                        for c in _calls(e):
+                            m += registry.get(c.fn).param_bytes()
+                peak = max(peak, m)
+            return schema, cap
+        schema, cap = _derive_info(node, registry, catalog, child_infos)
+        m = base(schema, cap)
+        if isinstance(node, ph.PBlockedMatmul):
+            fn = registry.get(node.fn)
+            # streamed: only one weight tile resident at a time
+            m += fn.param_bytes() / max(node.n_tiles, 1)
+        elif isinstance(node, ph.PForestRelational):
+            fn = registry.get(node.fn)
+            p = fn.graph.nodes[0].atom.params
+            m += fn.param_bytes() / max(int(p["feat"].shape[0]), 1)
+        peak = max(peak, m)
+        return schema, cap
+
+    visit(pplan.root)
+    return peak
 
 
 # ---------------------------------------------------------------------------
@@ -169,21 +479,183 @@ def _local_mem(node, registry, catalog, profile, phys=None):
     return base
 
 
-def plan_peak_memory(plan: ir.Plan, catalog: ir.Catalog,
+def plan_peak_memory(plan, catalog: ir.Catalog,
                      profile: DeviceProfile | None = None) -> float:
-    profile = profile or DeviceProfile()
+    from repro.core import physical as ph
+    profile = profile or default_profile()
+    if isinstance(plan, ph.PhysicalPlan):
+        return phys_peak_memory(plan, catalog, profile)
     return node_mem(plan.root, plan.registry, catalog, profile, plan.phys)
 
 
-def plan_cost(plan: ir.Plan, catalog: ir.Catalog,
+# ---------------------------------------------------------------------------
+# the single entry point
+# ---------------------------------------------------------------------------
+
+def plan_cost(plan, catalog: ir.Catalog,
               profile: DeviceProfile | None = None,
               memory_budget: float | None = None) -> float:
-    """Analytic plan latency; plans whose working set exceeds the memory
+    """Analytic plan latency — logical ``ir.Plan`` or physical
+    ``PhysicalPlan`` alike; plans whose working set exceeds the memory
     budget pay a paging/OOM penalty (mirrors the paper's OOM failures)."""
-    profile = profile or DeviceProfile()
-    t = node_cost(plan.root, plan.registry, catalog, profile, plan.phys)
+    from repro.core import physical as ph
+    profile = profile or default_profile()
+    if isinstance(plan, ph.PhysicalPlan):
+        t = sum(op_time(oc, profile)
+                for oc in phys_op_costs(plan, catalog, profile))
+    else:
+        t = node_cost(plan.root, plan.registry, catalog, profile, plan.phys)
     if memory_budget is not None:
         peak = plan_peak_memory(plan, catalog, profile)
         if peak > memory_budget:
             t *= 1.0 + 20.0 * (peak / memory_budget - 1.0)
     return t
+
+
+@dataclasses.dataclass
+class CostBreakdown:
+    """Profile-independent resource totals of one plan (plus the seconds the
+    given profile predicts) — the calibration features of ``fit_profile``.
+    ``hbm_bytes`` are per-query data traffic (they scale with batch
+    occupancy); ``param_bytes`` stream once per dispatch."""
+    flops: float
+    hbm_bytes: float
+    param_bytes: float
+    vmem_bytes: float
+    n_ops: int
+    seconds: float
+
+    def scaled(self, occupancy: float) -> "CostBreakdown":
+        """The breakdown of one ``occupancy``-query micro-batched dispatch:
+        data traffic and FLOPs scale, weights and op count do not."""
+        return dataclasses.replace(self, flops=self.flops * occupancy,
+                                   hbm_bytes=self.hbm_bytes * occupancy,
+                                   vmem_bytes=self.vmem_bytes * occupancy)
+
+
+def plan_cost_breakdown(plan, catalog: ir.Catalog,
+                        profile: DeviceProfile | None = None) -> CostBreakdown:
+    from repro.core import physical as ph
+    profile = profile or default_profile()
+    if isinstance(plan, ph.PhysicalPlan):
+        ocs = phys_op_costs(plan, catalog, profile)
+    else:
+        ocs = [oc for oc in
+               (_node_op_cost(n, plan.registry, catalog, profile, plan.phys)
+                for n in ir.walk(plan.root)) if oc is not None]
+    return CostBreakdown(
+        flops=sum(oc.flops for oc in ocs),
+        hbm_bytes=sum(oc.data_bytes for oc in ocs if oc.bw == "hbm"),
+        param_bytes=sum(oc.param_bytes for oc in ocs if oc.bw == "hbm"),
+        vmem_bytes=sum(oc.data_bytes + oc.param_bytes for oc in ocs
+                       if oc.bw == "vmem"),
+        n_ops=sum(oc.n_ops for oc in ocs),
+        seconds=sum(op_time(oc, profile) for oc in ocs))
+
+
+def batched_plan_cost(plan, catalog: ir.Catalog, batch_size: int,
+                      profile: DeviceProfile | None = None,
+                      ways: int = 1) -> float:
+    """Predicted latency of one micro-batched dispatch of ``batch_size``
+    same-signature queries: data traffic and FLOPs scale with the per-shard
+    slice (``batch_size / ways``), weights are replicated (streamed once per
+    shard), and a ``ways``-way sharded dispatch pays the profile's collective
+    overhead per shard. ``ways=1`` is the vmapped single-device realization;
+    the serving tier's vmapped-vs-sharded choice compares the two
+    (``costed_lowering.choose_batch_realization``)."""
+    from repro.core import physical as ph
+    profile = profile or default_profile()
+    if isinstance(plan, ph.PhysicalPlan):
+        ocs = phys_op_costs(plan, catalog, profile)
+    else:
+        ocs = [oc for oc in
+               (_node_op_cost(n, plan.registry, catalog, profile, plan.phys)
+                for n in ir.walk(plan.root)) if oc is not None]
+    scale = batch_size / max(ways, 1)
+    t = sum(op_time(oc, profile, data_scale=scale) for oc in ocs)
+    if ways > 1:
+        t += ways * profile.collective_overhead_s
+    return t
+
+
+# ---------------------------------------------------------------------------
+# online calibration: measured latencies -> refitted profile
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CalibrationFit:
+    profile: DeviceProfile
+    n_samples: int
+    mape_before: float
+    mape_after: float
+
+
+def _mape(pred: np.ndarray, actual: np.ndarray) -> float:
+    actual = np.maximum(actual, 1e-12)
+    return float(np.mean(np.abs(pred - actual) / actual))
+
+
+def fit_profile(samples: Sequence[Tuple[CostBreakdown, float, float]],
+                prior: DeviceProfile, l2: float = 0.1,
+                max_shift: float = 100.0) -> CalibrationFit:
+    """Least-squares refit of (peak_flops, hbm_bw, op_overhead_s) from
+    measured latencies.
+
+    ``samples`` are ``(breakdown, measured_seconds, weight)`` triples; the
+    linearized prediction ``flops/peak + bytes/bw + n_ops*overhead`` is fit
+    in the coefficient space ``x = (1/peak, 1/bw, overhead)``. The loss is
+    the weighted *relative* squared error (a 200us dispatch mispredicted 2x
+    matters as much as a 200ms one) plus a log-space ridge toward the prior
+    — multiplicative shifts are what calibration corrects, so the penalty
+    is symmetric in them, and under-determined directions (serving traffic
+    rarely spans enough signatures to identify all three coefficients) stay
+    at the prior. Coefficients live in ``[prior/max_shift,
+    prior*max_shift]`` so a pathological batch of measurements cannot turn
+    the oracle nonsensical. Solved by deterministic per-coordinate search
+    over a refined log grid (3 coefficients; no solver dependency).
+    """
+    if not samples:
+        return CalibrationFit(dataclasses.replace(prior), 0, 0.0, 0.0)
+    A = np.array([[b.flops, b.hbm_bytes + b.param_bytes, float(b.n_ops)]
+                  for b, _, _ in samples], dtype=np.float64)
+    t = np.array([max(m, 1e-9) for _, m, _ in samples], dtype=np.float64)
+    w = np.array([max(wt, 1e-12) for _, _, wt in samples], dtype=np.float64)
+    x0 = np.array([1.0 / prior.peak_flops, 1.0 / prior.hbm_bw,
+                   prior.op_overhead_s], dtype=np.float64)
+    pred_before = A @ x0
+    lo, hi = x0 / max_shift, x0 * max_shift
+    w_total = float(np.sum(w))
+    log_shift = np.log(max_shift)
+
+    def objective(x: np.ndarray) -> float:
+        rel = (A @ x - t) / t
+        ridge = float(np.sum((np.log(x / x0) / log_shift) ** 2))
+        return float(np.sum(w * rel ** 2)) + l2 * w_total * ridge
+
+    x = x0.copy()
+    for _ in range(24):
+        x_prev = x.copy()
+        for k in range(3):
+            span_lo, span_hi = np.log(lo[k]), np.log(hi[k])
+            for _refine in range(3):
+                grid = np.exp(np.linspace(span_lo, span_hi, 33))
+                scores = []
+                for g in grid:
+                    xk = x.copy()
+                    xk[k] = g
+                    scores.append(objective(xk))
+                bi = int(np.argmin(scores))
+                x[k] = grid[bi]
+                span_lo = np.log(grid[max(bi - 1, 0)])
+                span_hi = np.log(grid[min(bi + 1, len(grid) - 1)])
+        if np.max(np.abs(np.log(x / np.maximum(x_prev, 1e-300)))) < 1e-6:
+            break
+    fitted = dataclasses.replace(
+        prior,
+        peak_flops=1.0 / x[0],
+        hbm_bw=1.0 / x[1],
+        op_overhead_s=float(x[2]),
+        name=prior.name if prior.name.endswith("+cal") else prior.name + "+cal")
+    return CalibrationFit(profile=fitted, n_samples=len(samples),
+                          mape_before=_mape(pred_before, t),
+                          mape_after=_mape(A @ x, t))

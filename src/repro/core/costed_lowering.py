@@ -1,0 +1,124 @@
+"""Costed lowering: pick the min-cost physical realization of a plan.
+
+Phase 2 of the two-phase lowering pipeline: ``stage_graph.build`` (phase 1)
+turns the logical plan into a stage-DAG of open decisions — stage order
+within each fused pipeline, compaction placement after selective filters,
+mode/backend realization per un-annotated ML node — and this module
+enumerates the bounded candidate set and scores every realized candidate
+through the *shared* cost oracle ``cost.plan_cost`` (the same entry point
+the MCTS optimizers reward against; see ``planner.analytic_cost_fn``).
+
+Enumeration is exhaustive over the cartesian product of site options while
+it fits in ``max_candidates``; beyond that it falls back to deterministic
+coordinate descent (two sweeps over the sites, committing the best option
+of each site against the current best decisions). Deviating from the
+tree-order default requires a *strictly* cheaper candidate, so plans the
+oracle cannot separate keep the heuristic lowering (and its cache keys).
+
+``choose_batch_realization`` is the same oracle applied to the serving
+tier's vmapped-vs-sharded choice for one micro-batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, Optional
+
+from repro.core import cost, ir, stage_graph
+from repro.core import physical as ph
+
+MAX_CANDIDATES = 64
+
+
+@dataclasses.dataclass
+class Lowered:
+    """A costed lowering result: the chosen physical plan plus the decision
+    vector that produced it (``signature`` is the plan-cache key part)."""
+    plan: ph.PhysicalPlan
+    decisions: Dict[str, int]
+    signature: str
+    cost: float
+    baseline_cost: float     # tree-order (heuristic) lowering, same oracle
+    candidates_scored: int
+
+
+def lower_costed(plan: ir.Plan, catalog: ir.Catalog, *,
+                 profile: Optional[cost.DeviceProfile] = None,
+                 backend: Optional[str] = None,
+                 memory_budget: Optional[float] = None,
+                 max_candidates: int = MAX_CANDIDATES) -> Lowered:
+    profile = profile or cost.default_profile()
+    graph = stage_graph.build(plan, catalog, backend=backend, profile=profile)
+
+    def score(d: Dict[str, int]) -> float:
+        return cost.plan_cost(graph.realize(d), catalog, profile,
+                              memory_budget=memory_budget)
+
+    best = dict(graph.default_decisions())
+    base_cost = score(best)
+    best_cost = base_cost
+    scored = 1
+    open_sites = [s for s in graph.sites.values() if len(s.options) > 1]
+    if open_sites:
+        if graph.n_candidates() <= max_candidates:
+            fixed = {sid: 0 for sid, s in graph.sites.items()
+                     if len(s.options) == 1}
+            for combo in itertools.product(
+                    *(range(len(s.options)) for s in open_sites)):
+                d = dict(fixed)
+                d.update({s.sid: c for s, c in zip(open_sites, combo)})
+                if d == best and scored > 0:
+                    continue  # default already scored
+                c = score(d)
+                scored += 1
+                if c < best_cost:  # strict: ties keep the tree order
+                    best, best_cost = d, c
+        else:
+            # deterministic coordinate descent, two sweeps
+            for _ in range(2):
+                moved = False
+                for site in open_sites:
+                    for oi in range(len(site.options)):
+                        if oi == best[site.sid]:
+                            continue
+                        d = dict(best)
+                        d[site.sid] = oi
+                        c = score(d)
+                        scored += 1
+                        if c < best_cost:
+                            best, best_cost = d, c
+                            moved = True
+                if not moved:
+                    break
+    return Lowered(plan=graph.realize(best), decisions=best,
+                   signature=graph.decision_signature(best),
+                   cost=best_cost, baseline_cost=base_cost,
+                   candidates_scored=scored)
+
+
+def choose_batch_realization(plan: ir.Plan, catalog: ir.Catalog,
+                             batch_size: int, mesh=None,
+                             profile: Optional[cost.DeviceProfile] = None
+                             ) -> str:
+    """'sharded' or 'batched' for one eligible micro-batch, by the shared
+    oracle: a ``ways``-way sharded dispatch runs each shard on the
+    ``batch_size/ways`` slice (weights replicated) but pays the profile's
+    per-shard collective overhead. Each side is priced at the realization
+    it would actually run — the sharded path lowers every node to the
+    pure-XLA backend (``PLAN_LEVEL_BACKENDS``), so a pallas-annotated plan
+    does not get pallas bandwidth credited to its sharded candidate.
+    Ineligible meshes are always 'batched' (``core.mesh.can_shard`` is the
+    legality gate, this is the cost gate)."""
+    from repro.core import mesh as mesh_util
+    from repro.core.lowering import lower
+
+    if mesh is None or not mesh_util.can_shard(mesh, batch_size):
+        return "batched"
+    profile = profile or cost.default_profile()
+    ways = mesh_util.batch_ways(mesh)
+    pp_vmap = lower(plan, catalog, costed=False)
+    pp_shard = lower(plan, catalog, costed=False, backend="sharded")
+    c_vmap = cost.batched_plan_cost(pp_vmap, catalog, batch_size, profile)
+    c_shard = cost.batched_plan_cost(pp_shard, catalog, batch_size, profile,
+                                     ways=ways)
+    return "sharded" if c_shard <= c_vmap else "batched"

@@ -1,11 +1,16 @@
 """Lowering pass: logical Plan -> PhysicalPlan.
 
-Realization choices come from the plan's physical side table
-(``plan.phys``, keyed by node uid); nodes without an annotation get
-``ir.DEFAULT_PHYS`` with the tile count sized from the weight (same policy
-R3-1 uses when it annotates). Adjacent row-local operators (Filter, Project,
-Compact) fuse into a single ``PPipeline`` stage chain — one driver per
-pipeline instead of one interpreter dispatch per logical node.
+By default lowering is *cost-driven* (``costed=True``): the plan becomes a
+stage-DAG of candidate decisions (``core.stage_graph``) and
+``core.costed_lowering`` picks the min-cost physical realization through
+the shared ``cost.plan_cost`` oracle. The tree-order heuristic below
+(``costed=False``) remains the baseline: realization choices come from the
+plan's physical side table (``plan.phys``, keyed by node uid); nodes
+without an annotation get ``ir.DEFAULT_PHYS`` with the tile count sized
+from the weight (same policy R3-1 uses when it annotates). Adjacent
+row-local operators (Filter, Project, Compact) fuse into a single
+``PPipeline`` stage chain — one driver per pipeline instead of one
+interpreter dispatch per logical node.
 
 ``backend`` overrides every annotation's backend ('jnp' forces the pure-XLA
 path, 'pallas' the TPU kernels) without touching the plan — the paper's
@@ -95,12 +100,25 @@ def _lower_node(node: ir.RelNode, plan: ir.Plan, catalog: ir.Catalog,
 
 
 def lower(plan: ir.Plan, catalog: ir.Catalog, *,
-          backend: Optional[str] = None) -> ph.PhysicalPlan:
+          backend: Optional[str] = None, costed: bool = True,
+          profile=None, memory_budget: Optional[float] = None
+          ) -> ph.PhysicalPlan:
     """Lower a logical plan to its physical realization.
 
-    ``catalog`` parameterizes lowering decisions that need statistics (none of
-    the current fusions do, but cost-based stage ordering will); ``backend``
-    force-overrides every node's backend annotation.
+    By default lowering is *cost-driven*: the plan is turned into a
+    stage-DAG of candidate decisions (``core.stage_graph``) and the min-cost
+    realization under the shared analytic oracle is picked
+    (``core.costed_lowering`` / ``cost.plan_cost``) — ``catalog`` supplies
+    the statistics those decisions need. ``costed=False`` keeps the
+    tree-order heuristic (one stage per logical node, pipelines fused in
+    tree order) — also the costed path's baseline and the shape
+    ``plan_cost`` assumes when costing a *logical* plan. ``backend``
+    force-overrides every node's backend annotation in either mode;
+    ``profile``/``memory_budget`` parameterize the costed oracle.
     """
+    if costed:
+        from repro.core.costed_lowering import lower_costed
+        return lower_costed(plan, catalog, backend=backend, profile=profile,
+                            memory_budget=memory_budget).plan
     root = _lower_node(plan.root, plan, catalog, backend)
     return ph.PhysicalPlan(root=root, registry=plan.registry)

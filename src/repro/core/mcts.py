@@ -15,7 +15,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import ir
+from repro.core import cost, ir
 from repro.core.rules import ALL_RULES
 from repro.core.rules.base import RuleConfig
 
@@ -98,11 +98,14 @@ def _select_ucb(node: _VNode, c: float) -> _VNode:
 
 
 class VanillaMCTS:
-    def __init__(self, catalog: ir.Catalog, cost_fn: CostFn, iterations: int = 40,
+    def __init__(self, catalog: ir.Catalog, cost_fn: Optional[CostFn] = None,
+                 iterations: int = 40,
                  c: float = 0.7, max_depth: int = 6, rollout_depth: int = 3,
                  seed: int = 0, actions: Optional[List[str]] = None):
         self.catalog = catalog
-        self.cost_fn = cost_fn
+        # default reward oracle: the shared plan_cost entry point (the same
+        # oracle costed lowering scores its physical candidates with)
+        self.cost_fn = cost_fn or (lambda p: cost.plan_cost(p, catalog))
         self.iterations = iterations
         self.c = c
         self.max_depth = max_depth

@@ -14,7 +14,6 @@ import numpy as np
 
 from repro.core import embedding as E
 from repro.core import ir, wl
-from repro.core.cost import CPU_PROFILE
 from repro.core.plan_cache import LRUCache
 from repro.core.planner import analytic_cost_fn
 from repro.train.optim import AdamW

@@ -11,6 +11,16 @@ name + architecture (atom kinds, parameter shapes/dtypes) to the key; weight
 *values* are assumed stable per name (model-registry contract) — an in-place
 weight update that keeps name and shapes needs a fresh name or cache.
 
+Lowering inside the cache is *cost-driven* (``core.costed_lowering``
+against the cache's ``DeviceProfile``), and the chosen realization vector
+is part of ``key()`` (the ``#cl=...`` suffix). ``recalibrate(profile)`` —
+the serving feedback loop's entry point — bumps ``profile_epoch``, which
+invalidates the per-signature lowering memo: a recalibrated profile that
+changes a lowering decision selects a *different* executable under a new
+key instead of aliasing the stale one (equal decisions keep sharing the
+old entry, which is exactly right — every realization computes the same
+result, only the predicted latency moved).
+
 ``get_or_compile_batched(plan, catalog, batch_size)`` is the serving tier's
 entry point (repro.serving): same key plus a ``#vmap=B`` suffix, and the
 compiled executable is one ``jax.vmap``ped dispatch over B same-signature
@@ -29,15 +39,16 @@ used to bound the QueryEmbedder's embedding cache).
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from collections import OrderedDict
 from typing import Any, Callable, Dict, Hashable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import ir
-from repro.core.lowering import lower
+from repro.core import costed_lowering, ir
 from repro.core import physical as ph
+from repro.core.cost import DeviceProfile
 from repro.relational.table import Table
 
 
@@ -166,21 +177,78 @@ def registry_signature(plan: ir.Plan) -> str:
 class PlanCache:
     """Signature-keyed cache of compiled (jitted) plan executables."""
 
-    def __init__(self, maxsize: int = 64):
+    def __init__(self, maxsize: int = 64,
+                 profile: Optional[DeviceProfile] = None):
         self._cache = LRUCache(maxsize)
         self.traces = 0  # times jax actually (re)traced a cached executable
+        self._profile = profile  # lazily detected; see profile property
+        self.profile_epoch = 0   # bumped by recalibrate()
+        # per-(signature, backend, epoch) costed-lowering results: warm
+        # dispatches pay one LRU lookup, not a candidate enumeration
+        self._lowered = LRUCache(256)
 
     @property
     def stats(self) -> CacheStats:
         return self._cache.stats
 
-    def key(self, plan: ir.Plan, catalog: ir.Catalog) -> str:
+    @property
+    def profile(self) -> DeviceProfile:
+        """The device profile lowering decisions are costed against."""
+        if self._profile is None:
+            self._profile = DeviceProfile.detect()
+        return self._profile
+
+    def recalibrate(self, profile: DeviceProfile) -> None:
+        """Install a (feedback-calibrated) profile. Bumping the epoch
+        re-derives lowering decisions on the next dispatch of every
+        signature; signatures whose decisions change get fresh cache keys
+        (no stale-executable aliasing), unchanged ones keep their entry."""
+        self._profile = profile
+        self.profile_epoch += 1
+
+    def base_key(self, plan: ir.Plan, catalog: ir.Catalog) -> str:
         # sign only the tables the plan scans: the traced program never sees
         # the rest of the catalog, so an unrelated table must not over-key
         # the cache into a false miss (see schema_signature)
         return (plan.signature()
                 + "@" + schema_signature(catalog, scan_table_names(plan))
                 + "@" + registry_signature(plan))
+
+    def key(self, plan: ir.Plan, catalog: ir.Catalog) -> str:
+        """Full executable key: base signature + the realization vector the
+        costed lowering chose under the cache's current profile."""
+        base = self.base_key(plan, catalog)
+        return base + "#cl=" + self._lowered_for(plan, catalog, base,
+                                                 None).signature
+
+    def _lowered_for(self, plan: ir.Plan, catalog: ir.Catalog,
+                     keyed: str, backend: Optional[str]
+                     ) -> costed_lowering.Lowered:
+        """Costed-lowering result for ``plan``, memoized per (signature,
+        backend, profile epoch, *catalog object*) — ``keyed`` must already
+        include the ``#be=`` suffix when ``backend`` is set.
+
+        Catalog identity matters because compaction decisions are sized
+        from the catalog's *data* (exact row counts), which the schema-only
+        signature cannot see: a different same-schema catalog re-derives
+        its own decisions (and, via the ``#cl=`` key suffix, its own
+        executable when the counts differ enough to change a capacity).
+        The weakref guards id reuse by a freed catalog."""
+        mk = (keyed, self.profile_epoch, id(catalog))
+        hit = self._lowered.get(mk)
+        if hit is not None and hit[0]() is catalog:
+            return hit[1]
+        low = costed_lowering.lower_costed(plan, catalog,
+                                           profile=self.profile,
+                                           backend=backend)
+        self._lowered.put(mk, (weakref.ref(catalog), low))
+        return low
+
+    @staticmethod
+    def _strip_cl(key: str) -> str:
+        """Drop a stale ``#cl=`` decision suffix from a caller-memoized key
+        (it is re-derived against the current profile epoch)."""
+        return key.split("#cl=", 1)[0]
 
     def get_or_compile(self, plan: ir.Plan, catalog: ir.Catalog,
                        *, backend: Optional[str] = None,
@@ -189,12 +257,15 @@ class PlanCache:
         """``cache_key`` lets hot callers (the serving tier memoizes it at
         admission) skip the signature walk on warm dispatches; it must equal
         ``self.key(plan, catalog)``."""
-        key = cache_key if cache_key is not None else self.key(plan, catalog)
+        base = self._strip_cl(cache_key if cache_key is not None
+                              else self.base_key(plan, catalog))
         if backend is not None:
-            key = f"{key}#be={backend}"
+            base = f"{base}#be={backend}"
+        low = self._lowered_for(plan, catalog, base, backend)
+        key = base + "#cl=" + low.signature
         fn = self._cache.get(key)
         if fn is None:
-            pplan = lower(plan, catalog, backend=backend)
+            pplan = low.plan
             names = scan_table_names(plan)
 
             def traced(tables: Dict[str, Table]) -> Table:
@@ -234,16 +305,18 @@ class PlanCache:
         """
         if batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got {batch_size}")
-        base = cache_key if cache_key is not None else self.key(plan, catalog)
-        key = base + f"#vmap={batch_size}"
+        base = self._strip_cl(cache_key if cache_key is not None
+                              else self.base_key(plan, catalog))
         if backend is not None:
-            key = f"{key}#be={backend}"
-        return self._get_or_compile_stacked(key, plan, catalog, batch_size,
-                                            backend=backend, kind="batched")
+            base = f"{base}#be={backend}"
+        low = self._lowered_for(plan, catalog, base, backend)
+        key = base + "#cl=" + low.signature + f"#vmap={batch_size}"
+        return self._get_or_compile_stacked(key, low.plan, plan, catalog,
+                                            batch_size, kind="batched")
 
-    def _get_or_compile_stacked(self, key: str, plan: ir.Plan,
+    def _get_or_compile_stacked(self, key: str, pplan, plan: ir.Plan,
                                 catalog: ir.Catalog, batch_size: int, *,
-                                backend: Optional[str], kind: str,
+                                kind: str,
                                 wrap: Optional[Callable] = None):
         """Shared body of the batched/sharded entries: stack ``batch_size``
         same-schema table dicts on a leading axis, run the vmapped plan body
@@ -254,7 +327,6 @@ class PlanCache:
         across realizations."""
         fn = self._cache.get(key)
         if fn is None:
-            pplan = lower(plan, catalog, backend=backend)
             names = scan_table_names(plan)
 
             def batch_body(stacked):
@@ -307,11 +379,14 @@ class PlanCache:
         if not mesh_util.can_shard(mesh, batch_size):
             return self.get_or_compile_batched(plan, catalog, batch_size,
                                                cache_key=cache_key)
-        base = cache_key if cache_key is not None else self.key(plan, catalog)
-        key = (base + f"#be=sharded#vmap={batch_size}"
+        base = self._strip_cl(cache_key if cache_key is not None
+                              else self.base_key(plan, catalog))
+        base = f"{base}#be=sharded"
+        low = self._lowered_for(plan, catalog, base, "sharded")
+        key = (base + "#cl=" + low.signature + f"#vmap={batch_size}"
                + f"#mesh={mesh_util.mesh_signature(mesh)}")
         return self._get_or_compile_stacked(
-            key, plan, catalog, batch_size, backend="sharded", kind="sharded",
+            key, low.plan, plan, catalog, batch_size, kind="sharded",
             wrap=lambda body: mesh_util.shard_batch(body, mesh))
 
     def __call__(self, plan: ir.Plan, catalog: ir.Catalog) -> Table:

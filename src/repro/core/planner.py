@@ -7,7 +7,7 @@ import time
 from typing import Callable, Dict, Optional, Tuple
 
 from repro.core import ir
-from repro.core.cost import DeviceProfile, CPU_PROFILE, plan_cost
+from repro.core.cost import DeviceProfile, default_profile, plan_cost
 from repro.core.mcts import (ACTION_SPACE, VanillaMCTS, ReusableMCTS,
                              configure_action)
 from repro.core.rules import ALL_RULES
@@ -15,7 +15,10 @@ from repro.core.rules import ALL_RULES
 
 def analytic_cost_fn(catalog: ir.Catalog, profile: DeviceProfile | None = None,
                      memory_budget: float | None = None) -> Callable:
-    profile = profile or CPU_PROFILE
+    """The MCTS/greedy reward oracle: the same ``plan_cost`` entry point
+    costed lowering scores its candidates with, against the same detected
+    device profile — one notion of "cheap" across optimizer and executor."""
+    profile = profile or default_profile()
 
     def cost(plan: ir.Plan) -> float:
         return plan_cost(plan, catalog, profile, memory_budget=memory_budget)

@@ -28,8 +28,9 @@ from typing import Callable, Optional
 
 import jax
 
+from repro.core import costed_lowering
 from repro.core import mesh as mesh_util
-from repro.core.plan_cache import PlanCache
+from repro.core.plan_cache import LRUCache, PlanCache
 from repro.serving.batcher import MicroBatch
 
 
@@ -45,6 +46,24 @@ class BatchedExecutor:
         self.dispatches = 0
         self.batched_dispatches = 0
         self.sharded_dispatches = 0
+        # vmapped-vs-sharded is a costed decision (the shared oracle against
+        # the cache's profile); memoized off the dispatch path per
+        # (signature, batch size, profile epoch)
+        self._realization_memo = LRUCache(256)
+
+    def _use_sharded(self, batch: MicroBatch) -> bool:
+        reqs = batch.requests
+        if (len(reqs) <= 1 or self.backend is not None
+                or not mesh_util.can_shard(self.mesh, len(reqs))):
+            return False
+        mk = (batch.key, len(reqs), self.cache.profile_epoch)
+        dec = self._realization_memo.get(mk)
+        if dec is None:
+            dec = costed_lowering.choose_batch_realization(
+                reqs[0].plan, reqs[0].catalog, len(reqs), self.mesh,
+                profile=self.cache.profile)
+            self._realization_memo.put(mk, dec)
+        return dec == "sharded"
 
     def dispatch(self, batch: MicroBatch) -> float:
         """Execute the micro-batch; fill each request's result. Returns the
@@ -55,9 +74,9 @@ class BatchedExecutor:
         # sharded realization lowers per-node to jnp, and silently serving
         # the same signature with different kernel realizations depending on
         # batch size would discard the caller's choice exactly on the hot
-        # (grouped) traffic
-        sharded = (len(reqs) > 1 and self.backend is None
-                   and mesh_util.can_shard(self.mesh, len(reqs)))
+        # (grouped) traffic. Eligible batches still go through the cost
+        # oracle: sharding only when the profile predicts it pays.
+        sharded = self._use_sharded(batch)
         t0 = self.clock()
         if len(reqs) == 1:
             run = self.cache.get_or_compile(rep.plan, rep.catalog,

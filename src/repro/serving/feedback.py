@@ -1,4 +1,5 @@
-"""Feedback channel: serving-tier signature statistics -> optimizer warm-starts.
+"""Feedback channel: serving-tier signature statistics -> optimizer warm-starts
+and cost-oracle calibration.
 
 Closes the ROADMAP loop "feed cache hit statistics back into ReusableMCTS
 warm-starts": the signatures the server actually sees — weighted by traffic
@@ -9,14 +10,26 @@ populates the optimizer's embedding-keyed global node store
 (including parameter variants whose exact signature differs but whose
 Query2Vec embedding collides) starts from a warm root and needs only
 ``warm_iterations`` instead of a cold full search.
+
+The same statistics also sharpen the *analytic* oracle online:
+``calibrate_profile`` least-squares-fits the device profile's
+``peak_flops`` / ``hbm_bw`` / ``op_overhead_s`` against measured
+per-signature dispatch latencies (via ``cost.plan_cost_breakdown``'s
+linearized predictions), and ``apply_calibration`` installs the fitted
+profile into a ``PlanCache`` — whose costed lowering then re-derives its
+decisions under the new profile (``PlanCache.recalibrate`` bumps the
+profile epoch, so a changed decision selects a fresh executable instead of
+aliasing a stale one). Serving traffic thereby sharpens future lowering
+decisions.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Optional
 
-from repro.core import ir
+from repro.core import cost, ir
 from repro.core.mcts import ReusableMCTS
+from repro.core.plan_cache import PlanCache
 from repro.serving.server import QueryServer
 
 
@@ -82,3 +95,46 @@ def warm_start_from_server(mcts: ReusableMCTS,
                        "iterations": stats["iterations"]})
     return {"primed": primed, "store_nodes": len(mcts.nodes),
             "store_bytes": mcts.storage_bytes()}
+
+
+# ---------------------------------------------------------------------------
+# analytic-oracle calibration from measured dispatch latencies
+# ---------------------------------------------------------------------------
+
+def calibrate_profile(exports: List[SignatureExport],
+                      profile: Optional[cost.DeviceProfile] = None,
+                      *, l2: float = 0.1) -> cost.CalibrationFit:
+    """Refit the device profile against measured serving latencies.
+
+    Each served signature contributes one sample: the analytic resource
+    breakdown of its representative plan scaled to the signature's mean
+    batch occupancy (data traffic and FLOPs ride the batch axis, weights
+    stream once per dispatch) against its measured mean dispatch seconds,
+    weighted by dispatch count. The fit solves for ``(1/peak_flops,
+    1/hbm_bw, op_overhead_s)`` with a ridge pull toward the prior — see
+    ``cost.fit_profile``.
+    """
+    profile = profile or cost.default_profile()
+    samples = []
+    for e in exports:
+        if e.dispatches <= 0 or e.mean_dispatch_s <= 0:
+            continue
+        b = cost.plan_cost_breakdown(e.plan, e.catalog, profile)
+        samples.append((b.scaled(max(e.mean_occupancy, 1.0)),
+                        e.mean_dispatch_s, float(e.dispatches)))
+    return cost.fit_profile(samples, profile, l2=l2)
+
+
+def apply_calibration(cache: PlanCache, exports: List[SignatureExport],
+                      *, l2: float = 0.1) -> cost.CalibrationFit:
+    """Calibrate against the cache's current profile and install the fit.
+
+    ``PlanCache.recalibrate`` bumps the profile epoch: every signature's
+    lowering decisions are re-derived on its next dispatch, and a changed
+    realization vector changes the executable key — serving traffic
+    sharpens future lowering decisions without stale-executable aliasing.
+    """
+    fit = calibrate_profile(exports, cache.profile, l2=l2)
+    if fit.n_samples:
+        cache.recalibrate(fit.profile)
+    return fit

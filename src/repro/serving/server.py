@@ -106,13 +106,18 @@ class QueryServer:
             tables = dict(catalog.tables)
         memo = self._submit_memo.get((id(plan), id(catalog)))
         if memo is not None and (memo[0]() is not plan
-                                 or memo[1]() is not catalog):
+                                 or memo[1]() is not catalog
+                                 # a recalibrated profile can change the
+                                 # key's lowering-decision suffix: a stale
+                                 # memo must not alias the old executable
+                                 or memo[4] != self.cache.profile_epoch):
             memo = None  # id was reused by a different object
         if memo is None:
             memo = (weakref.ref(plan), weakref.ref(catalog),
-                    self.cache.key(plan, catalog), scan_table_names(plan))
+                    self.cache.key(plan, catalog), scan_table_names(plan),
+                    self.cache.profile_epoch)
             self._submit_memo.put((id(plan), id(catalog)), memo)
-        _, _, key, scanned = memo
+        _, _, key, scanned, _ = memo
         # ship only the tables the plan scans: the batched executor stacks
         # every leaf of every request, so catalog tables the query never
         # touches would be pure copy overhead on the dispatch path
