@@ -40,8 +40,18 @@ class DeviceProfile:
     elem_bytes: int = 4
     # fixed overhead per relational operator (dispatch/fusion boundary)
     op_overhead_s: float = 2e-6
-    # per-shard fan-in/out overhead of a multi-device (sharded) dispatch
-    collective_overhead_s: float = 0.0
+    # per-shard fan-in/out overhead of a multi-device (sharded) dispatch and
+    # per-shard launch cost of one in-plan collective (allgather/psum).
+    # Every backend prior is non-zero: a 0.0 default would price all
+    # collectives as free and silently bias every sharded-vs-local decision
+    # toward sharding; serving/feedback.py calibrates it online alongside
+    # peak_flops/hbm_bw/op_overhead_s when sharded traffic exists.
+    collective_overhead_s: float = 1e-6
+    # per-device working-set budget in bytes (None = unlimited): costed
+    # lowering hard-rejects candidates whose phys_peak_memory exceeds it,
+    # and plan_cost applies its paging penalty. The serving tier installs
+    # its real budget here (QueryServer(memory_budget=...)).
+    memory_budget: Optional[float] = None
     # whether the pallas kernel realizations are executable on this device
     supports_pallas: bool = True
 
@@ -51,9 +61,10 @@ class DeviceProfile:
         decisions. (PlanCache invalidates its decision memos via
         ``profile_epoch``, bumped by ``recalibrate()`` — mutating a
         profile's fields in place does NOT re-derive decisions.)"""
+        mb = "-" if self.memory_budget is None else f"{self.memory_budget:.4e}"
         return (f"{self.name}:pf={self.peak_flops:.4e},bw={self.hbm_bw:.4e},"
                 f"vb={self.vmem_bw:.4e},ov={self.op_overhead_s:.4e},"
-                f"co={self.collective_overhead_s:.4e}")
+                f"co={self.collective_overhead_s:.4e},mb={mb}")
 
     @classmethod
     def detect(cls) -> "DeviceProfile":
@@ -73,14 +84,20 @@ class DeviceProfile:
         return dataclasses.replace(prior)
 
 
-TPU_PROFILE = DeviceProfile()
+# collective priors: per-shard launch latency of one ICI/NVLink collective
+# on real accelerators; the "devices" of a forced CPU host mesh share one
+# address space, so a collective there is a plain memcpy whose *volume*
+# already rides data_bytes — only a tiny per-launch latency remains
+TPU_PROFILE = DeviceProfile(collective_overhead_s=1e-6)
 
 GPU_PROFILE = DeviceProfile(name="gpu-a100", peak_flops=312e12,
                             hbm_bw=1.55e12, vmem_bw=5.0e12,
-                            op_overhead_s=3e-6, supports_pallas=False)
+                            op_overhead_s=3e-6, collective_overhead_s=2e-6,
+                            supports_pallas=False)
 
 CPU_PROFILE = DeviceProfile(name="cpu", peak_flops=2e11, hbm_bw=3e10,
                             vmem_bw=2e11, op_overhead_s=5e-6,
+                            collective_overhead_s=2e-7,
                             supports_pallas=False)
 
 _DETECTED: Optional[DeviceProfile] = None
@@ -106,7 +123,10 @@ class OpCost:
     ``data_bytes`` scale with the data/batch axis (a B-query vmapped
     dispatch moves B x data_bytes); ``param_bytes`` are weight traffic,
     streamed once per dispatch and replicated across shards. ``n_ops``
-    counts dispatch/fusion-boundary overhead units (``op_overhead_s``).
+    counts dispatch/fusion-boundary overhead units (``op_overhead_s``);
+    ``n_coll`` counts per-shard collective launches
+    (``collective_overhead_s`` — a ``ways``-way allgather/psum pays
+    ``ways`` of them, its exchange volume rides ``data_bytes``).
     """
     label: str
     flops: float = 0.0
@@ -114,6 +134,7 @@ class OpCost:
     param_bytes: float = 0.0
     bw: str = "hbm"              # 'hbm' | 'vmem' (pallas-fused operators)
     n_ops: int = 1
+    n_coll: int = 0
 
 
 def op_time(oc: OpCost, profile: DeviceProfile, data_scale: float = 1.0) -> float:
@@ -121,7 +142,8 @@ def op_time(oc: OpCost, profile: DeviceProfile, data_scale: float = 1.0) -> floa
     bw = profile.vmem_bw if oc.bw == "vmem" else profile.hbm_bw
     return (max(oc.flops * data_scale / profile.peak_flops,
                 (oc.data_bytes * data_scale + oc.param_bytes) / bw)
-            + oc.n_ops * profile.op_overhead_s)
+            + oc.n_ops * profile.op_overhead_s
+            + oc.n_coll * profile.collective_overhead_s)
 
 
 def _row_bytes(schema: Dict[str, int], profile: DeviceProfile) -> float:
@@ -177,6 +199,30 @@ def _matmul_cost(fn, x_dim, capacity, cfg: ir.PhysConfig, profile) -> OpCost:
     return OpCost("matmul", flops=fl, data_bytes=2 * xby, param_bytes=pb,
                   bw="vmem" if cfg.backend == "pallas" else "hbm",
                   n_ops=1 + extra)
+
+
+def _repartition_cost(node, schema, in_cap, profile) -> OpCost:
+    """Partition-boundary cost: local copies for slice/bucket, exchange
+    volume + per-shard collective launches for allgather/combine."""
+    rb = _row_bytes(schema, profile)
+    if node.op == "slice":
+        return OpCost("repart_slice", data_bytes=2.0 * rb * node.out_capacity)
+    if node.op == "allgather":
+        # each device receives and writes the full reassembled table
+        return OpCost("repart_allgather",
+                      data_bytes=2.0 * rb * node.out_capacity,
+                      n_coll=node.ways)
+    if node.op == "bucket":
+        # hash + compare on the key column, mask write
+        return OpCost("repart_bucket", flops=4.0 * in_cap,
+                      data_bytes=3.0 * profile.elem_bytes * in_cap)
+    if node.op == "combine":
+        # zero-and-psum of every column: full-table exchange per device
+        return OpCost("repart_combine",
+                      flops=float(max(len(schema), 1)) * in_cap,
+                      data_bytes=2.0 * rb * node.out_capacity,
+                      n_coll=node.ways)
+    raise ValueError(f"unknown repartition op {node.op!r}")
 
 
 def _forest_cost(fn, x_dim, capacity, cfg: ir.PhysConfig, profile) -> OpCost:
@@ -325,6 +371,14 @@ def _derive_info(node, registry: Registry, catalog: ir.Catalog,
         schema = dict(cs) if node.keep is None else {k: cs[k] for k in node.keep}
         schema[node.out_col] = 0
         return schema, cc
+    if isinstance(node, ph.PRepartition):
+        cs, cc = child_infos[0]
+        if node.op in ("slice", "allgather"):
+            # the walk downstream of a slice sees the per-device block
+            # capacity, which is what makes the physical walk price (and
+            # phys_peak_memory bound) *per-device* work on partitioned plans
+            return cs, node.out_capacity
+        return cs, cc  # bucket/combine: capacity unchanged
     raise TypeError(type(node))
 
 
@@ -389,6 +443,9 @@ def phys_op_costs(pplan, catalog: ir.Catalog,
             cfg = ir.PhysConfig(mode=node.mode, backend=node.backend)
             out.append(_forest_cost(registry.get(node.fn), cs[node.x_col],
                                     cc, cfg, profile))
+        elif isinstance(node, ph.PRepartition):
+            cs, cc = child_infos[0]
+            out.append(_repartition_cost(node, cs, cc, profile))
         elif not isinstance(node, ph.PScan):
             raise TypeError(type(node))
         return info
@@ -436,6 +493,10 @@ def phys_peak_memory(pplan, catalog: ir.Catalog,
             fn = registry.get(node.fn)
             p = fn.graph.nodes[0].atom.params
             m += fn.param_bytes() / max(int(p["feat"].shape[0]), 1)
+        elif isinstance(node, ph.PRepartition) and node.op == "allgather":
+            # the gather target holds the padded concatenation of every
+            # device's block (in_capacity = per-device block) briefly
+            m = base(schema, node.in_capacity * node.ways)
         peak = max(peak, m)
         return schema, cap
 
@@ -497,15 +558,21 @@ def plan_cost(plan, catalog: ir.Catalog,
               memory_budget: float | None = None) -> float:
     """Analytic plan latency — logical ``ir.Plan`` or physical
     ``PhysicalPlan`` alike; plans whose working set exceeds the memory
-    budget pay a paging/OOM penalty (mirrors the paper's OOM failures)."""
+    budget pay a paging/OOM penalty (mirrors the paper's OOM failures).
+    ``memory_budget`` defaults to the profile's own per-device budget; a
+    non-finite budget is explicitly unlimited (callers that already
+    checked the peak themselves — costed lowering's hard gate — pass
+    ``inf`` to skip the redundant peak walk)."""
     from repro.core import physical as ph
     profile = profile or default_profile()
+    if memory_budget is None:
+        memory_budget = profile.memory_budget
     if isinstance(plan, ph.PhysicalPlan):
         t = sum(op_time(oc, profile)
                 for oc in phys_op_costs(plan, catalog, profile))
     else:
         t = node_cost(plan.root, plan.registry, catalog, profile, plan.phys)
-    if memory_budget is not None:
+    if memory_budget is not None and np.isfinite(memory_budget):
         peak = plan_peak_memory(plan, catalog, profile)
         if peak > memory_budget:
             t *= 1.0 + 20.0 * (peak / memory_budget - 1.0)
@@ -517,13 +584,17 @@ class CostBreakdown:
     """Profile-independent resource totals of one plan (plus the seconds the
     given profile predicts) — the calibration features of ``fit_profile``.
     ``hbm_bytes`` are per-query data traffic (they scale with batch
-    occupancy); ``param_bytes`` stream once per dispatch."""
+    occupancy); ``param_bytes`` stream once per dispatch. ``n_coll``
+    counts per-shard collective launches (in-plan repartition boundaries
+    and/or the sharded dispatch's fan-in/out) — the calibration feature of
+    ``collective_overhead_s``."""
     flops: float
     hbm_bytes: float
     param_bytes: float
     vmem_bytes: float
     n_ops: int
     seconds: float
+    n_coll: float = 0.0
 
     def scaled(self, occupancy: float) -> "CostBreakdown":
         """The breakdown of one ``occupancy``-query micro-batched dispatch:
@@ -550,7 +621,8 @@ def plan_cost_breakdown(plan, catalog: ir.Catalog,
         vmem_bytes=sum(oc.data_bytes + oc.param_bytes for oc in ocs
                        if oc.bw == "vmem"),
         n_ops=sum(oc.n_ops for oc in ocs),
-        seconds=sum(op_time(oc, profile) for oc in ocs))
+        seconds=sum(op_time(oc, profile) for oc in ocs),
+        n_coll=float(sum(oc.n_coll for oc in ocs)))
 
 
 def batched_plan_cost(plan, catalog: ir.Catalog, batch_size: int,
@@ -598,30 +670,36 @@ def _mape(pred: np.ndarray, actual: np.ndarray) -> float:
 def fit_profile(samples: Sequence[Tuple[CostBreakdown, float, float]],
                 prior: DeviceProfile, l2: float = 0.1,
                 max_shift: float = 100.0) -> CalibrationFit:
-    """Least-squares refit of (peak_flops, hbm_bw, op_overhead_s) from
-    measured latencies.
+    """Least-squares refit of (peak_flops, hbm_bw, op_overhead_s,
+    collective_overhead_s) from measured latencies.
 
     ``samples`` are ``(breakdown, measured_seconds, weight)`` triples; the
-    linearized prediction ``flops/peak + bytes/bw + n_ops*overhead`` is fit
-    in the coefficient space ``x = (1/peak, 1/bw, overhead)``. The loss is
-    the weighted *relative* squared error (a 200us dispatch mispredicted 2x
-    matters as much as a 200ms one) plus a log-space ridge toward the prior
-    — multiplicative shifts are what calibration corrects, so the penalty
-    is symmetric in them, and under-determined directions (serving traffic
-    rarely spans enough signatures to identify all three coefficients) stay
-    at the prior. Coefficients live in ``[prior/max_shift,
-    prior*max_shift]`` so a pathological batch of measurements cannot turn
-    the oracle nonsensical. Solved by deterministic per-coordinate search
-    over a refined log grid (3 coefficients; no solver dependency).
+    linearized prediction ``flops/peak + bytes/bw + n_ops*overhead +
+    n_coll*coll_overhead`` is fit in the coefficient space ``x = (1/peak,
+    1/bw, overhead, coll_overhead)``. The loss is the weighted *relative*
+    squared error (a 200us dispatch mispredicted 2x matters as much as a
+    200ms one) plus a log-space ridge toward the prior — multiplicative
+    shifts are what calibration corrects, so the penalty is symmetric in
+    them, and under-determined directions (serving traffic rarely spans
+    enough signatures to identify every coefficient; purely single-device
+    traffic has an all-zero ``n_coll`` column) stay at the prior.
+    Coefficients live in ``[prior/max_shift, prior*max_shift]`` so a
+    pathological batch of measurements cannot turn the oracle nonsensical;
+    a coefficient whose prior is zero is pinned (the log-space ridge has no
+    anchor there). Solved by deterministic per-coordinate search over a
+    refined log grid (4 coefficients; no solver dependency).
     """
     if not samples:
         return CalibrationFit(dataclasses.replace(prior), 0, 0.0, 0.0)
-    A = np.array([[b.flops, b.hbm_bytes + b.param_bytes, float(b.n_ops)]
+    A = np.array([[b.flops, b.hbm_bytes + b.param_bytes, float(b.n_ops),
+                   float(b.n_coll)]
                   for b, _, _ in samples], dtype=np.float64)
     t = np.array([max(m, 1e-9) for _, m, _ in samples], dtype=np.float64)
     w = np.array([max(wt, 1e-12) for _, _, wt in samples], dtype=np.float64)
     x0 = np.array([1.0 / prior.peak_flops, 1.0 / prior.hbm_bw,
-                   prior.op_overhead_s], dtype=np.float64)
+                   prior.op_overhead_s, prior.collective_overhead_s],
+                  dtype=np.float64)
+    active = [k for k in range(4) if x0[k] > 0]
     pred_before = A @ x0
     lo, hi = x0 / max_shift, x0 * max_shift
     w_total = float(np.sum(w))
@@ -629,13 +707,14 @@ def fit_profile(samples: Sequence[Tuple[CostBreakdown, float, float]],
 
     def objective(x: np.ndarray) -> float:
         rel = (A @ x - t) / t
-        ridge = float(np.sum((np.log(x / x0) / log_shift) ** 2))
+        ridge = float(sum((np.log(x[k] / x0[k]) / log_shift) ** 2
+                          for k in active))
         return float(np.sum(w * rel ** 2)) + l2 * w_total * ridge
 
     x = x0.copy()
     for _ in range(24):
         x_prev = x.copy()
-        for k in range(3):
+        for k in active:
             span_lo, span_hi = np.log(lo[k]), np.log(hi[k])
             for _refine in range(3):
                 grid = np.exp(np.linspace(span_lo, span_hi, 33))
@@ -648,13 +727,15 @@ def fit_profile(samples: Sequence[Tuple[CostBreakdown, float, float]],
                 x[k] = grid[bi]
                 span_lo = np.log(grid[max(bi - 1, 0)])
                 span_hi = np.log(grid[min(bi + 1, len(grid) - 1)])
-        if np.max(np.abs(np.log(x / np.maximum(x_prev, 1e-300)))) < 1e-6:
+        if np.max(np.abs(np.log(np.maximum(x, 1e-300)
+                                / np.maximum(x_prev, 1e-300)))) < 1e-6:
             break
     fitted = dataclasses.replace(
         prior,
         peak_flops=1.0 / x[0],
         hbm_bw=1.0 / x[1],
         op_overhead_s=float(x[2]),
+        collective_overhead_s=float(x[3]),
         name=prior.name if prior.name.endswith("+cal") else prior.name + "+cal")
     return CalibrationFit(profile=fitted, n_samples=len(samples),
                           mape_before=_mape(pred_before, t),

@@ -22,6 +22,8 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import logging
+import math
 from typing import Dict, Optional
 
 from repro.core import cost, ir, stage_graph
@@ -29,33 +31,65 @@ from repro.core import physical as ph
 
 MAX_CANDIDATES = 64
 
+logger = logging.getLogger(__name__)
+
 
 @dataclasses.dataclass
 class Lowered:
     """A costed lowering result: the chosen physical plan plus the decision
-    vector that produced it (``signature`` is the plan-cache key part)."""
+    vector that produced it (``signature`` is the plan-cache key part).
+
+    ``budget_pruned`` counts candidates the per-device memory budget
+    hard-rejected; ``budget_pruned_all`` is the misconfiguration flag —
+    *every* scored candidate (including the partitioned ones) busted the
+    budget and lowering fell back to tree order, so the chosen plan does
+    NOT fit. Surfacing it here (plus a log line) keeps a too-small budget
+    visible instead of silently degrading to arbitrary plans."""
     plan: ph.PhysicalPlan
     decisions: Dict[str, int]
     signature: str
     cost: float
     baseline_cost: float     # tree-order (heuristic) lowering, same oracle
     candidates_scored: int
+    peak_memory: float = 0.0          # per-device, of the chosen plan
+    memory_budget: Optional[float] = None
+    budget_pruned: int = 0
+    budget_pruned_all: bool = False
 
 
 def lower_costed(plan: ir.Plan, catalog: ir.Catalog, *,
                  profile: Optional[cost.DeviceProfile] = None,
                  backend: Optional[str] = None,
                  memory_budget: Optional[float] = None,
-                 max_candidates: int = MAX_CANDIDATES) -> Lowered:
+                 max_candidates: int = MAX_CANDIDATES,
+                 ways: int = 1) -> Lowered:
+    """Min-cost lowering. ``ways > 1`` opens per-node PartSpec sites
+    (intra-query sharding over a ``ways``-device data mesh);
+    ``memory_budget`` (defaulting to the profile's per-device budget)
+    hard-rejects any candidate whose ``phys_peak_memory`` exceeds it —
+    the serving tier's admission path for oversized single queries."""
     profile = profile or cost.default_profile()
-    graph = stage_graph.build(plan, catalog, backend=backend, profile=profile)
+    if memory_budget is None:
+        memory_budget = profile.memory_budget
+    graph = stage_graph.build(plan, catalog, backend=backend, profile=profile,
+                              ways=ways)
+    pruned = {"n": 0}
 
     def score(d: Dict[str, int]) -> float:
-        return cost.plan_cost(graph.realize(d), catalog, profile,
-                              memory_budget=memory_budget)
+        """Oracle cost, or +inf for candidates the memory budget rejects.
+        The hard gate already walked the peak, so plan_cost gets an
+        explicitly unlimited budget instead of re-walking it (its paging
+        penalty could never fire on a candidate that passed the gate)."""
+        pp = graph.realize(d)
+        if memory_budget is not None:
+            if cost.phys_peak_memory(pp, catalog, profile) > memory_budget:
+                pruned["n"] += 1
+                return math.inf
+        return cost.plan_cost(pp, catalog, profile, memory_budget=math.inf)
 
-    best = dict(graph.default_decisions())
-    base_cost = score(best)
+    default = dict(graph.default_decisions())
+    best = default
+    base_cost = score(default)
     best_cost = base_cost
     scored = 1
     open_sites = [s for s in graph.sites.values() if len(s.options) > 1]
@@ -74,7 +108,18 @@ def lower_costed(plan: ir.Plan, catalog: ir.Catalog, *,
                 if c < best_cost:  # strict: ties keep the tree order
                     best, best_cost = d, c
         else:
-            # deterministic coordinate descent, two sweeps
+            # deterministic coordinate descent, two sweeps. Under a memory
+            # budget the all-replicated default can be infeasible while no
+            # single-site flip is (partitioning one node just moves the
+            # full-size boundary), so the maximally partitioned vector is
+            # scored as a second seed and the descent starts from the
+            # better of the two.
+            if graph.ways > 1:
+                seed = graph.partitioned_decisions()
+                c = score(seed)
+                scored += 1
+                if c < best_cost:
+                    best, best_cost = seed, c
             for _ in range(2):
                 moved = False
                 for site in open_sites:
@@ -90,10 +135,30 @@ def lower_costed(plan: ir.Plan, catalog: ir.Catalog, *,
                             moved = True
                 if not moved:
                     break
-    return Lowered(plan=graph.realize(best), decisions=best,
+    pruned_all = math.isinf(best_cost) and pruned["n"] > 0
+    if pruned_all:
+        # every candidate busts the budget: fall back to tree order, but
+        # say so — a silent fallback reads as "this plan fits" when the
+        # real story is a misconfigured (or genuinely impossible) budget
+        best = default
+        best_cost = cost.plan_cost(graph.realize(best), catalog, profile,
+                                   memory_budget=memory_budget)
+        logger.warning(
+            "memory budget %.3g B pruned all %d scored lowering candidates "
+            "(ways=%d); falling back to tree order, which does NOT fit",
+            memory_budget, scored, graph.ways)
+    chosen = graph.realize(best)
+    return Lowered(plan=chosen, decisions=best,
                    signature=graph.decision_signature(best),
-                   cost=best_cost, baseline_cost=base_cost,
-                   candidates_scored=scored)
+                   cost=best_cost,
+                   baseline_cost=(base_cost if not math.isinf(base_cost)
+                                  else best_cost),
+                   candidates_scored=scored,
+                   peak_memory=cost.phys_peak_memory(chosen, catalog,
+                                                     profile),
+                   memory_budget=memory_budget,
+                   budget_pruned=pruned["n"],
+                   budget_pruned_all=pruned_all)
 
 
 def choose_batch_realization(plan: ir.Plan, catalog: ir.Catalog,

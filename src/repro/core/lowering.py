@@ -101,8 +101,8 @@ def _lower_node(node: ir.RelNode, plan: ir.Plan, catalog: ir.Catalog,
 
 def lower(plan: ir.Plan, catalog: ir.Catalog, *,
           backend: Optional[str] = None, costed: bool = True,
-          profile=None, memory_budget: Optional[float] = None
-          ) -> ph.PhysicalPlan:
+          profile=None, memory_budget: Optional[float] = None,
+          ways: int = 1) -> ph.PhysicalPlan:
     """Lower a logical plan to its physical realization.
 
     By default lowering is *cost-driven*: the plan is turned into a
@@ -115,10 +115,14 @@ def lower(plan: ir.Plan, catalog: ir.Catalog, *,
     ``plan_cost`` assumes when costing a *logical* plan. ``backend``
     force-overrides every node's backend annotation in either mode;
     ``profile``/``memory_budget`` parameterize the costed oracle.
+    ``ways > 1`` (costed only) opens per-node ``PartSpec`` candidates —
+    intra-query sharding over a ``ways``-device data mesh, with explicit
+    ``PRepartition`` boundaries; the resulting plan must execute inside
+    ``shard_map`` (``PlanCache.get_or_compile_partitioned``).
     """
     if costed:
         from repro.core.costed_lowering import lower_costed
         return lower_costed(plan, catalog, backend=backend, profile=profile,
-                            memory_budget=memory_budget).plan
+                            memory_budget=memory_budget, ways=ways).plan
     root = _lower_node(plan.root, plan, catalog, backend)
     return ph.PhysicalPlan(root=root, registry=plan.registry)

@@ -18,6 +18,17 @@ and no operator changes. This module owns the mesh plumbing for that path:
 * ``mesh_signature`` — the mesh's contribution to compiled-plan cache keys.
 * ``shard_batch``    — wrap a stacked-batch function in ``shard_map`` over
                        the mesh's batch axes (jax-version compatible).
+
+It is also the *one* home of the intra-query partition arithmetic the
+PartSpec layer uses (``repro.core.physical.PartSpec`` /
+``PRepartition``): ``row_block`` / ``padded_capacity`` size the per-device
+row blocks of a row-partitioned operator, ``hash_bucket`` is the join-key
+bucketing function of hash-partitioned ``PJoin``, and
+``shard_replicated`` wraps a whole partitioned plan body in ``shard_map``
+with replicated inputs/outputs (the collectives live *inside* the plan as
+explicit repartition ops). The production/host mesh builders formerly in
+``repro.launch.mesh`` live here too — that module re-exports them — so
+every mesh helper has exactly one definition.
 """
 from __future__ import annotations
 
@@ -26,6 +37,7 @@ from typing import Callable, Optional, Sequence
 import numpy as np
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.models.sharding import batch_axes, batch_spec
@@ -114,3 +126,77 @@ def shard_batch(fn: Callable, mesh: Mesh) -> Callable:
         except TypeError:
             continue
     raise TypeError("shard_map signature not recognized")
+
+
+def shard_replicated(fn: Callable, mesh: Mesh) -> Callable:
+    """``shard_map`` a *partitioned plan body* over the mesh: inputs and
+    outputs are replicated (every device sees the full catalog tables and
+    produces the full result), and all data movement happens through the
+    explicit ``PRepartition`` collectives inside ``fn`` (slice /
+    all_gather / psum against ``jax.lax.axis_index``). This is the
+    single-oversized-query counterpart of ``shard_batch``: there is no
+    stacked batch axis to split, the *operators* are partitioned instead.
+    """
+    try:  # jax >= 0.6
+        from jax import shard_map as _shard_map
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as _shard_map
+    spec = P()  # replicated in/out; movement is explicit inside the body
+    for kw in ({"check_rep": False}, {"check_vma": False}, {}):
+        try:
+            return _shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec,
+                              **kw)
+        except TypeError:
+            continue
+    raise TypeError("shard_map signature not recognized")
+
+
+# ---------------------------------------------------------------------------
+# intra-query partition arithmetic (the PartSpec layer's shared helpers)
+# ---------------------------------------------------------------------------
+
+def row_block(capacity: int, ways: int) -> int:
+    """Per-device row-block size of a ``ways``-way row partition of a
+    ``capacity``-row table: ``ceil(capacity / ways)`` — non-dividing
+    capacities pad the tail with invalid rows (``padded_capacity``)."""
+    if ways < 1:
+        raise ValueError(f"ways must be >= 1, got {ways}")
+    return -(-int(capacity) // ways)
+
+
+def padded_capacity(capacity: int, ways: int) -> int:
+    """Smallest multiple of ``row_block`` covering ``capacity``: the shape
+    row-partitioned blocks re-concatenate to before the trailing padding
+    rows (all invalid, all at the tail) are sliced off."""
+    return row_block(capacity, ways) * ways
+
+
+def hash_bucket(keys, ways: int):
+    """Device bucket of each (integer) join key: ``key mod ways``.
+
+    The single bucketing function of hash-partitioned joins — both join
+    sides and the cost model must agree on it, so it lives here. ``jnp.mod``
+    is non-negative for positive ``ways`` regardless of key sign."""
+    return jnp.mod(jnp.asarray(keys, jnp.int32), jnp.int32(ways))
+
+
+# ---------------------------------------------------------------------------
+# production / host mesh builders (canonical home; repro.launch.mesh
+# re-exports these — functions, never module-level constants: the dry-run
+# must set XLA_FLAGS before any jax device state is touched)
+# ---------------------------------------------------------------------------
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips (16 data x 16 model). Multi-pod: 2 x 256."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: Optional[int] = None, model: int = 1):
+    """Small mesh over the locally visible devices (tests / CPU runs)."""
+    n = jax.device_count()
+    data = data if data is not None else max(n // model, 1)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

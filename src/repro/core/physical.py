@@ -17,11 +17,25 @@ Operators:
                      matmul; backend 'pallas' uses the TPU kernel.
   PForestRelational— R3-2 realization: 'relational' streams the tree relation;
                      'fused' evaluates the ensemble per row.
+  PRepartition     — intra-query partition boundary: converts its child's
+                     row distribution (replicated / row-block / hash-bucket
+                     over the mesh's data axis) into the one its consumer
+                     executes under, via ``shard_map`` collectives.
+
+Partitioning is an explicit per-node decision, not a whole-plan property:
+``PhysicalPlan.parts`` is a side table (mirroring ``ir.Plan.phys``) mapping
+each node's tree path to the ``PartSpec`` it executes under, and lowering
+inserts ``PRepartition`` boundaries exactly where adjacent specs disagree.
+Under a row partition every operator body is *unchanged* — each device runs
+the ordinary single-device code on its row block; under a hash partition a
+join runs on bucket-masked inputs — so partitioned execution is the same
+``run_node`` with an ``axis`` name bound inside ``shard_map``
+(``core.mesh.shard_replicated``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple, Union
+from typing import Dict, Mapping, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +45,40 @@ from repro.core.evaluator import as_column, eval_expr
 from repro.mlfuncs.registry import Registry
 from repro.relational import ops
 from repro.relational.table import Table
+
+
+# ---------------------------------------------------------------------------
+# PartSpec: how one node's rows are split over the mesh's data axis
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PartSpec:
+    """Row distribution of one physical node's output.
+
+    kind : 'rep'  — replicated: every device holds all rows (the
+                    single-device semantics; the default everywhere).
+           'row'  — row blocks: device i holds rows
+                    ``[i*ceil(C/ways), (i+1)*ceil(C/ways))`` of the
+                    (tail-padded) table; local capacity is the block size.
+           'hash' — hash buckets: full capacity everywhere, but device i's
+                    valid mask is restricted to rows whose
+                    ``hash_bucket(key) == i`` (static shapes make a
+                    compacted bucket capacity unsound under skew — all keys
+                    may land in one bucket — so bucket partitioning trades
+                    no memory for collective-free local joins).
+    """
+    kind: str = "rep"
+    ways: int = 1
+    key: Optional[str] = None  # bucket column ('hash' only)
+
+    def signature(self) -> str:
+        if self.kind == "rep":
+            return "rep"
+        tag = f"{self.kind}{self.ways}"
+        return tag + (f"[{self.key}]" if self.key else "")
+
+
+REPLICATED = PartSpec()
 
 
 # ---------------------------------------------------------------------------
@@ -153,12 +201,58 @@ class PForestRelational(PhysNode):
 
 
 @dataclasses.dataclass(frozen=True)
+class PRepartition(PhysNode):
+    """Partition boundary: convert the child's PartSpec into the consumer's.
+
+    op : 'slice'     — replicated -> row: device i takes its block of the
+                       tail-padded table (``out_capacity`` = block size).
+      'allgather' — row -> replicated: concatenate all blocks
+                       (``jax.lax.all_gather`` tiled) and drop the tail
+                       padding back to ``out_capacity`` (the global
+                       capacity) — row blocks tile the original row order,
+                       so the reassembled table is bit-identical to the
+                       unpartitioned one.
+      'bucket'    — replicated -> hash: mask validity to the rows whose
+                       ``hash_bucket(key) == axis_index``.
+      'combine'   — hash -> replicated: zero the rows a device does not
+                       own and ``psum`` columns + masks (each valid row is
+                       owned by exactly one device, so the sum is exact —
+                       including total skew, where one device owns all).
+    """
+    child: PhysNode
+    op: str
+    ways: int
+    in_capacity: int
+    out_capacity: int
+    key: Optional[str] = None  # bucket column ('bucket' only)
+
+    def children(self):
+        return (self.child,)
+
+
+@dataclasses.dataclass(frozen=True)
 class PhysicalPlan:
     root: PhysNode
     registry: Registry
+    # PartSpec side table (mirrors ir.Plan.phys): node tree path -> the
+    # spec the node executes under. "r" is the root, "r.0" its first
+    # child, ... Empty on unpartitioned plans; purely descriptive at run
+    # time (execution follows the explicit PRepartition boundaries).
+    parts: Mapping[str, PartSpec] = dataclasses.field(default_factory=dict)
+    ways: int = 1  # >1 iff any node's spec is partitioned
 
     def signature(self) -> str:
         return phys_signature(self.root)
+
+    def part_for(self, path: str) -> PartSpec:
+        return self.parts.get(path, REPLICATED)
+
+    def part_signature(self) -> str:
+        """The PartSpec vector, compact and stable (cache-key material):
+        only non-replicated entries, in tree-path order."""
+        items = [f"{p}={s.signature()}" for p, s in sorted(self.parts.items())
+                 if s.kind != "rep"]
+        return ",".join(items) if items else "rep"
 
 
 def phys_signature(node: PhysNode) -> str:
@@ -181,6 +275,9 @@ def phys_signature(node: PhysNode) -> str:
     if isinstance(node, PForestRelational):
         return (f"FR({node.x_col}->{node.out_col},{node.fn},{node.mode},"
                 f"{node.backend},{phys_signature(node.child)})")
+    if isinstance(node, PRepartition):
+        return (f"RP({node.op},{node.ways},{node.key},{node.in_capacity}"
+                f"->{node.out_capacity},{phys_signature(node.child)})")
     raise TypeError(type(node))
 
 
@@ -294,6 +391,61 @@ def forest_relational(t: Table, x_col: str, fn) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# repartition boundaries (shard_map collectives)
+# ---------------------------------------------------------------------------
+
+def _pad_rows(x: jax.Array, n: int):
+    """Append ``n`` zero rows (False for the valid mask) at the tail."""
+    if n <= 0:
+        return x
+    return jnp.pad(x, ((0, n),) + ((0, 0),) * (x.ndim - 1))
+
+
+def run_repartition(node: PRepartition, t: Table, axis: Optional[str]) -> Table:
+    from repro.core import mesh as mesh_util
+
+    if axis is None:
+        raise RuntimeError(
+            f"PRepartition({node.op}) needs a mesh axis: partitioned plans "
+            "execute inside shard_map (core.mesh.shard_replicated) — see "
+            "PlanCache.get_or_compile_partitioned")
+    i = jax.lax.axis_index(axis)
+    if node.op == "slice":
+        block = node.out_capacity
+        pad = block * node.ways - t.capacity
+
+        def sl(x):
+            return jax.lax.dynamic_slice_in_dim(_pad_rows(x, pad), i * block,
+                                                block, axis=0)
+
+        return Table(columns={k: sl(v) for k, v in t.columns.items()},
+                     valid=sl(t.valid))
+    if node.op == "allgather":
+        # blocks tile the (tail-padded) original row order: concatenating
+        # them and slicing off the padding restores the exact global table
+        def ag(x):
+            return jax.lax.all_gather(x, axis, axis=0,
+                                      tiled=True)[:node.out_capacity]
+
+        return Table(columns={k: ag(v) for k, v in t.columns.items()},
+                     valid=ag(t.valid))
+    if node.op == "bucket":
+        own = mesh_util.hash_bucket(t[node.key], node.ways) == i
+        return Table(columns=t.columns, valid=t.valid & own)
+    if node.op == "combine":
+        # each valid row is owned by exactly one device: zero the rest and
+        # psum — exact for ints, and exact for floats too (x + 0.0 == x)
+        def cb(x):
+            m = t.valid.reshape((-1,) + (1,) * (x.ndim - 1))
+            return jax.lax.psum(jnp.where(m, x, jnp.zeros((), x.dtype)), axis)
+
+        valid = jax.lax.psum(t.valid.astype(jnp.int32), axis) > 0
+        return Table(columns={k: cb(v) for k, v in t.columns.items()},
+                     valid=valid)
+    raise ValueError(f"unknown repartition op {node.op!r}")
+
+
+# ---------------------------------------------------------------------------
 # physical execution
 # ---------------------------------------------------------------------------
 
@@ -312,27 +464,27 @@ def _run_stage(stage: Stage, t: Table, registry: Registry) -> Table:
 
 
 def run_node(node: PhysNode, tables: Dict[str, Table],
-             registry: Registry) -> Table:
+             registry: Registry, axis: Optional[str] = None) -> Table:
     if isinstance(node, PScan):
         return tables[node.table]
     if isinstance(node, PPipeline):
-        t = run_node(node.child, tables, registry)
+        t = run_node(node.child, tables, registry, axis)
         for stage in node.stages:
             t = _run_stage(stage, t, registry)
         return t
     if isinstance(node, PJoin):
-        lt = run_node(node.left, tables, registry)
-        rt = run_node(node.right, tables, registry)
+        lt = run_node(node.left, tables, registry, axis)
+        rt = run_node(node.right, tables, registry, axis)
         return ops.fk_join(lt, rt, node.left_key, node.right_key, node.rprefix)
     if isinstance(node, PCrossJoin):
-        lt = run_node(node.left, tables, registry)
-        rt = run_node(node.right, tables, registry)
+        lt = run_node(node.left, tables, registry, axis)
+        rt = run_node(node.right, tables, registry, axis)
         return ops.cross_join(lt, rt, node.aprefix, node.bprefix)
     if isinstance(node, PAggregate):
-        t = run_node(node.child, tables, registry)
+        t = run_node(node.child, tables, registry, axis)
         return ops.aggregate(t, node.key, dict(node.aggs), node.num_groups)
     if isinstance(node, PBlockedMatmul):
-        t = run_node(node.child, tables, registry)
+        t = run_node(node.child, tables, registry, axis)
         w = matmul_weight(registry, node.fn)
         if node.mode == "relational":
             y = blocked_matmul_relational(t, node.x_col, w, node.n_tiles)
@@ -340,15 +492,22 @@ def run_node(node: PhysNode, tables: Dict[str, Table],
             y = blocked_matmul_fused(t[node.x_col], w, node.n_tiles, node.backend)
         return ops.project(t, {node.out_col: y}, keep=node.keep)
     if isinstance(node, PForestRelational):
-        t = run_node(node.child, tables, registry)
+        t = run_node(node.child, tables, registry, axis)
         fn = registry.get(node.fn)
         if node.mode == "relational":
             y = forest_relational(t, node.x_col, fn)
         else:
             y = forest_fused(t[node.x_col], fn, node.backend)
         return ops.project(t, {node.out_col: y}, keep=node.keep)
+    if isinstance(node, PRepartition):
+        t = run_node(node.child, tables, registry, axis)
+        return run_repartition(node, t, axis)
     raise TypeError(type(node))
 
 
-def run(pplan: PhysicalPlan, tables: Dict[str, Table]) -> Table:
-    return run_node(pplan.root, tables, pplan.registry)
+def run(pplan: PhysicalPlan, tables: Dict[str, Table],
+        axis: Optional[str] = None) -> Table:
+    """Execute a physical plan. ``axis`` names the shard_map mesh axis a
+    *partitioned* plan's repartition boundaries collect over; unpartitioned
+    plans (no PRepartition nodes) ignore it."""
+    return run_node(pplan.root, tables, pplan.registry, axis)

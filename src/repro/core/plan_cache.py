@@ -33,6 +33,14 @@ batch axis is ``shard_map``ped over the mesh's data axis, with automatic
 fallback to the vmapped single-device program when the batch doesn't divide
 the device count or only one device exists.
 
+``get_or_compile_partitioned(plan, catalog, mesh)`` is the intra-query
+counterpart for a *single oversized* query: lowering opens per-node
+``PartSpec`` candidates (operators partitioned over the mesh's data axis,
+explicit ``PRepartition`` collectives) under the profile's per-device
+``memory_budget``, and the chosen plan runs inside ``shard_map`` with
+replicated inputs/outputs. ``key(plan, catalog, mesh=...)`` exposes the
+matching key (the ``pt*`` decision tokens are the PartSpec vector).
+
 ``LRUCache`` + ``CacheStats`` are the shared bounded-cache machinery (also
 used to bound the QueryEmbedder's embedding cache).
 """
@@ -214,19 +222,41 @@ class PlanCache:
                 + "@" + schema_signature(catalog, scan_table_names(plan))
                 + "@" + registry_signature(plan))
 
-    def key(self, plan: ir.Plan, catalog: ir.Catalog) -> str:
+    def key(self, plan: ir.Plan, catalog: ir.Catalog, *, mesh=None,
+            backend: Optional[str] = None) -> str:
         """Full executable key: base signature + the realization vector the
-        costed lowering chose under the cache's current profile."""
+        costed lowering chose under the cache's current profile.
+
+        With ``mesh`` given (and more than one device on it), the key is
+        the *partitioned* realization's: ``#be=part#mesh=...`` plus the
+        decision vector of the PartSpec-aware lowering — the ``pt*`` site
+        tokens in the ``#cl=`` suffix ARE the PartSpec vector, so two
+        queries only share a partitioned executable when every node's
+        partitioning decision agrees. The serving tier keys oversized
+        single queries this way (``QueryServer.submit``); ``backend`` is
+        the caller's node-level kernel override, mirrored into the
+        partitioned lowering so the key matches what
+        ``get_or_compile_partitioned`` will compile."""
+        from repro.core import mesh as mesh_util
+
         base = self.base_key(plan, catalog)
-        return base + "#cl=" + self._lowered_for(plan, catalog, base,
-                                                 None).signature
+        ways = mesh_util.batch_ways(mesh) if mesh is not None else 1
+        if ways > 1:
+            base = f"{base}#be=part#mesh={mesh_util.mesh_signature(mesh)}"
+            if backend is not None:
+                base = f"{base}#nbe={backend}"
+            low = self._lowered_for(plan, catalog, base, backend, ways=ways)
+        else:
+            low = self._lowered_for(plan, catalog, base, None)
+        return base + "#cl=" + low.signature
 
     def _lowered_for(self, plan: ir.Plan, catalog: ir.Catalog,
-                     keyed: str, backend: Optional[str]
+                     keyed: str, backend: Optional[str], ways: int = 1
                      ) -> costed_lowering.Lowered:
         """Costed-lowering result for ``plan``, memoized per (signature,
         backend, profile epoch, *catalog object*) — ``keyed`` must already
-        include the ``#be=`` suffix when ``backend`` is set.
+        include the ``#be=`` suffix when ``backend`` is set, and the
+        ``#be=part#mesh=`` suffix when ``ways > 1``.
 
         Catalog identity matters because compaction decisions are sized
         from the catalog's *data* (exact row counts), which the schema-only
@@ -240,15 +270,16 @@ class PlanCache:
             return hit[1]
         low = costed_lowering.lower_costed(plan, catalog,
                                            profile=self.profile,
-                                           backend=backend)
+                                           backend=backend, ways=ways)
         self._lowered.put(mk, (weakref.ref(catalog), low))
         return low
 
     @staticmethod
     def _strip_cl(key: str) -> str:
-        """Drop a stale ``#cl=`` decision suffix from a caller-memoized key
-        (it is re-derived against the current profile epoch)."""
-        return key.split("#cl=", 1)[0]
+        """Drop a stale ``#cl=`` decision suffix — and any ``#be=``
+        realization suffix preceding it — from a caller-memoized key (both
+        are re-derived against the current profile epoch / entry point)."""
+        return key.split("#be=", 1)[0].split("#cl=", 1)[0]
 
     def get_or_compile(self, plan: ir.Plan, catalog: ir.Catalog,
                        *, backend: Optional[str] = None,
@@ -388,6 +419,65 @@ class PlanCache:
         return self._get_or_compile_stacked(
             key, low.plan, plan, catalog, batch_size, kind="sharded",
             wrap=lambda body: mesh_util.shard_batch(body, mesh))
+
+    def get_or_compile_partitioned(self, plan: ir.Plan, catalog: ir.Catalog,
+                                   mesh, *, backend: Optional[str] = None,
+                                   cache_key: Optional[str] = None):
+        """One *intra-query-sharded* executable for a single oversized
+        query: lowering opens per-node ``PartSpec`` candidates
+        (``ways = batch_ways(mesh)``), rejects candidates whose per-device
+        ``phys_peak_memory`` busts the profile's ``memory_budget``, and the
+        chosen plan — explicit ``PRepartition`` collectives included — runs
+        inside ``shard_map`` over the mesh's data axis with replicated
+        inputs/outputs (``core.mesh.shard_replicated``). Unlike
+        ``get_or_compile_sharded`` there is no batch axis: the *operators*
+        are partitioned (PCrossJoin by left rows, PJoin by probe rows or
+        hash bucket, pipelines/ML by row block), which is what lets one
+        query larger than a device use the whole mesh.
+
+        Returns ``run(tables) -> Table`` like ``get_or_compile``. The
+        realization is first-class in the key
+        (``#be=part#mesh=...#cl=...`` — the ``pt*`` decision tokens are
+        the PartSpec vector). ``backend`` constrains every node's *kernel*
+        realization exactly as in ``get_or_compile`` (partitioning is a
+        distribution choice, orthogonal to the caller's kernel choice).
+        Single-device meshes, and lowerings that decide partitioning does
+        not pay (every PartSpec replicated), fall back to the plain
+        executable under *its* key — no duplicate compilation."""
+        from repro.core import mesh as mesh_util
+
+        ways = mesh_util.batch_ways(mesh) if mesh is not None else 1
+        if ways <= 1:
+            return self.get_or_compile(plan, catalog, backend=backend,
+                                       cache_key=cache_key)
+        base = self._strip_cl(cache_key if cache_key is not None
+                              else self.base_key(plan, catalog))
+        base = f"{base}#be=part#mesh={mesh_util.mesh_signature(mesh)}"
+        if backend is not None:
+            base = f"{base}#nbe={backend}"
+        low = self._lowered_for(plan, catalog, base, backend, ways=ways)
+        if low.plan.ways <= 1:
+            # the oracle kept every node replicated: the partitioned
+            # program would be the plain one run redundantly on every
+            # device — share the plain executable instead
+            return self.get_or_compile(plan, catalog, backend=backend)
+        key = base + "#cl=" + low.signature
+        fn = self._cache.get(key)
+        if fn is None:
+            pplan = low.plan
+            names = scan_table_names(plan)
+
+            def traced(tables: Dict[str, Table]) -> Table:
+                self.traces += 1  # python side effect: runs only while tracing
+                return ph.run(pplan, tables, axis=mesh_util.DATA_AXIS)
+
+            jfn = jax.jit(mesh_util.shard_replicated(traced, mesh))
+
+            def fn(tables: Dict[str, Table]) -> Table:
+                return jfn({k: tables[k] for k in names})
+
+            self._cache.put(key, fn)
+        return fn
 
     def __call__(self, plan: ir.Plan, catalog: ir.Catalog) -> Table:
         """Convenience: compile-or-reuse, then execute on catalog tables."""

@@ -1,21 +1,13 @@
-"""Production mesh builders (functions, never module-level constants — the
-dry-run must set XLA_FLAGS before any jax device state is touched)."""
+"""Production mesh builders — re-exported from the canonical mesh module.
+
+All mesh helpers (production/host builders, the 1-D data mesh of the
+sharded execution path, and the PartSpec partition arithmetic) live in
+``repro.core.mesh``; this module survives as a compatibility shim for the
+launch stack. Builders are functions, never module-level constants — the
+dry-run must set XLA_FLAGS before any jax device state is touched.
+"""
 from __future__ import annotations
 
-import jax
+from repro.core.mesh import make_host_mesh, make_production_mesh
 
-
-def make_production_mesh(*, multi_pod: bool = False):
-    """Single pod: 256 chips (16 data x 16 model). Multi-pod: 2 x 256."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
-
-
-def make_host_mesh(data: int | None = None, model: int = 1):
-    """Small mesh over the locally visible devices (tests / CPU runs)."""
-    n = jax.device_count()
-    data = data if data is not None else max(n // model, 1)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+__all__ = ["make_host_mesh", "make_production_mesh"]

@@ -22,6 +22,10 @@ class MicroBatch:
     """One dispatchable group of same-signature requests."""
     key: str
     requests: List[QueryRequest]
+    # realization the executor actually served this batch with (stamped by
+    # BatchedExecutor.dispatch; the server folds them into SignatureStats)
+    sharded: bool = False
+    partitioned: bool = False
 
     def __len__(self) -> int:
         return len(self.requests)

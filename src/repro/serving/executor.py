@@ -16,6 +16,12 @@ explicit node-level ``backend`` override ('jnp'/'pallas') takes precedence
 over the mesh: the sharded realization lowers per-node to jnp, so honoring
 the override means not sharding.
 
+Requests the server flagged *partitioned* — oversized single queries whose
+working set busts the per-device memory budget — take
+``PlanCache.get_or_compile_partitioned`` instead: one intra-query-sharded
+dispatch per request (operators partitioned over the mesh, no batch axis),
+executed sequentially within the group.
+
 All request timestamps (``dispatch_t``, ``finish_t``) come from the
 executor's own single clock read bracketing the dispatch, so
 ``finish_t - dispatch_t`` equals the measured dispatch duration exactly —
@@ -46,6 +52,7 @@ class BatchedExecutor:
         self.dispatches = 0
         self.batched_dispatches = 0
         self.sharded_dispatches = 0
+        self.partitioned_dispatches = 0
         # vmapped-vs-sharded is a costed decision (the shared oracle against
         # the cache's profile); memoized off the dispatch path per
         # (signature, batch size, profile epoch)
@@ -70,15 +77,31 @@ class BatchedExecutor:
         duration of the (blocking) dispatch on the executor's clock."""
         reqs = batch.requests
         rep = reqs[0]  # same signature => same compiled program; any member
+        # oversized single queries (flagged at admission: working set busts
+        # the per-device budget) take the partitioned executable — one
+        # intra-query-sharded dispatch per request
+        partitioned = rep.partitioned and self.mesh is not None
         # an explicit node-level backend override disables sharding: the
         # sharded realization lowers per-node to jnp, and silently serving
         # the same signature with different kernel realizations depending on
         # batch size would discard the caller's choice exactly on the hot
         # (grouped) traffic. Eligible batches still go through the cost
         # oracle: sharding only when the profile predicts it pays.
-        sharded = self._use_sharded(batch)
+        sharded = (not partitioned) and self._use_sharded(batch)
+        batch.sharded, batch.partitioned = sharded, partitioned
         t0 = self.clock()
-        if len(reqs) == 1:
+        if partitioned:
+            # the caller's node-level kernel override constrains the
+            # partitioned lowering too — partitioning is a distribution
+            # choice, not a kernel one, so the two compose
+            run = self.cache.get_or_compile_partitioned(
+                rep.plan, rep.catalog, self.mesh, backend=self.backend,
+                cache_key=batch.key)
+            results = [run(r.tables) for r in reqs]
+            jax.block_until_ready(results)
+            # per completed *batch*, like every other dispatch counter
+            self.partitioned_dispatches += 1
+        elif len(reqs) == 1:
             run = self.cache.get_or_compile(rep.plan, rep.catalog,
                                             backend=self.backend,
                                             cache_key=batch.key)

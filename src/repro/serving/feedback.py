@@ -47,6 +47,12 @@ class SignatureExport:
     mean_wait_s: float
     plan: ir.Plan
     catalog: ir.Catalog
+    # multi-device traffic: how many dispatches ran sharded/partitioned and
+    # over how many devices — the calibration features of the profile's
+    # collective_overhead_s (single-device signatures leave them 0)
+    sharded_dispatches: int = 0
+    partitioned_dispatches: int = 0
+    ways: int = 0
 
     @property
     def weight(self) -> float:
@@ -67,7 +73,10 @@ def export_signature_stats(server: QueryServer) -> List[SignatureExport]:
                         mean_occupancy=s.mean_occupancy,
                         mean_dispatch_s=s.mean_dispatch_s,
                         mean_wait_s=s.mean_wait_s,
-                        plan=s.plan, catalog=s.catalog)
+                        plan=s.plan, catalog=s.catalog,
+                        sharded_dispatches=s.sharded_dispatches,
+                        partitioned_dispatches=s.partitioned_dispatches,
+                        ways=s.ways)
         for s in server.signatures.values()
         if s.plan is not None and s.dispatches > 0
     ]
@@ -110,8 +119,14 @@ def calibrate_profile(exports: List[SignatureExport],
     breakdown of its representative plan scaled to the signature's mean
     batch occupancy (data traffic and FLOPs ride the batch axis, weights
     stream once per dispatch) against its measured mean dispatch seconds,
-    weighted by dispatch count. The fit solves for ``(1/peak_flops,
-    1/hbm_bw, op_overhead_s)`` with a ridge pull toward the prior — see
+    weighted by dispatch count. Signatures whose dispatches ran
+    predominantly multi-device (sharded batch axis or partitioned
+    operators) are modeled like ``cost.batched_plan_cost`` models them:
+    per-shard data scale ``occupancy / ways`` plus ``ways`` collective
+    launches — which is what identifies ``collective_overhead_s``
+    alongside ``peak_flops`` / ``hbm_bw`` / ``op_overhead_s`` (an all-zero
+    ``n_coll`` column leaves it at the prior). The fit solves the
+    four-coefficient system with a ridge pull toward the prior — see
     ``cost.fit_profile``.
     """
     profile = profile or cost.default_profile()
@@ -120,8 +135,13 @@ def calibrate_profile(exports: List[SignatureExport],
         if e.dispatches <= 0 or e.mean_dispatch_s <= 0:
             continue
         b = cost.plan_cost_breakdown(e.plan, e.catalog, profile)
-        samples.append((b.scaled(max(e.mean_occupancy, 1.0)),
-                        e.mean_dispatch_s, float(e.dispatches)))
+        multi = e.sharded_dispatches + e.partitioned_dispatches
+        ways = e.ways if (e.ways > 1 and 2 * multi >= e.dispatches) else 1
+        sample = b.scaled(max(e.mean_occupancy, 1.0) / ways)
+        if ways > 1:
+            sample = dataclasses.replace(sample,
+                                         n_coll=sample.n_coll + float(ways))
+        samples.append((sample, e.mean_dispatch_s, float(e.dispatches)))
     return cost.fit_profile(samples, profile, l2=l2)
 
 

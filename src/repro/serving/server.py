@@ -34,6 +34,9 @@ class SignatureStats:
     served_requests: int = 0        # successfully dispatched requests only
     dispatches: int = 0
     batched_requests: int = 0       # requests served in a batch of >= 2
+    sharded_dispatches: int = 0     # dispatches served multi-device (batch
+    partitioned_dispatches: int = 0  # axis sharded / operators partitioned)
+    ways: int = 0                   # mesh device count of those dispatches
     failures: int = 0               # requests whose dispatch raised
     total_dispatch_s: float = 0.0
     total_wait_s: float = 0.0
@@ -67,6 +70,9 @@ class SignatureStats:
                 "served_requests": self.served_requests,
                 "dispatches": self.dispatches,
                 "batched_requests": self.batched_requests,
+                "sharded_dispatches": self.sharded_dispatches,
+                "partitioned_dispatches": self.partitioned_dispatches,
+                "ways": self.ways,
                 "mean_occupancy": self.mean_occupancy,
                 "mean_dispatch_s": self.mean_dispatch_s,
                 "mean_wait_s": self.mean_wait_s}
@@ -76,6 +82,7 @@ class QueryServer:
     def __init__(self, cache: Optional[PlanCache] = None,
                  max_batch_size: int = 8, max_wait_s: float = 2e-3,
                  backend: Optional[str] = None, mesh=None,
+                 memory_budget: Optional[float] = None,
                  clock: Callable[[], float] = time.monotonic):
         self.cache = cache or PlanCache()
         self.batcher = MicroBatcher(max_batch_size=max_batch_size,
@@ -84,6 +91,16 @@ class QueryServer:
         # the backend="sharded" executable (see BatchedExecutor.dispatch)
         self.executor = BatchedExecutor(self.cache, backend=backend,
                                         mesh=mesh, clock=clock)
+        self.mesh = mesh
+        from repro.core import mesh as mesh_util
+        self._ways = mesh_util.batch_ways(mesh) if mesh is not None else 1
+        # per-device working-set budget: installed on the cache's profile,
+        # so every costed-lowering decision this server triggers sees it.
+        # A submitted plan that busts it is routed to the *partitioned*
+        # executable (operators sharded over the mesh) instead of being
+        # served on one device (thrashing) or refused.
+        if memory_budget is not None:
+            self.cache.profile.memory_budget = float(memory_budget)
         self.clock = clock
         self.signatures: Dict[str, SignatureStats] = {}
         self.completed = 0
@@ -113,17 +130,31 @@ class QueryServer:
                                  or memo[4] != self.cache.profile_epoch):
             memo = None  # id was reused by a different object
         if memo is None:
-            memo = (weakref.ref(plan), weakref.ref(catalog),
-                    self.cache.key(plan, catalog), scan_table_names(plan),
-                    self.cache.profile_epoch)
+            # oversized single query: a working set over the per-device
+            # budget can't be served on one device — key it (and flag it)
+            # for the partitioned executable, whose PartSpec vector rides
+            # the key's #cl= decision tokens
+            from repro.core import cost as cost_mod
+            budget = self.cache.profile.memory_budget
+            partitioned = (
+                self._ways > 1 and budget is not None
+                and cost_mod.plan_peak_memory(plan, catalog,
+                                              self.cache.profile) > budget)
+            key = (self.cache.key(plan, catalog, mesh=self.mesh,
+                                  backend=self.executor.backend)
+                   if partitioned else self.cache.key(plan, catalog))
+            memo = (weakref.ref(plan), weakref.ref(catalog), key,
+                    scan_table_names(plan), self.cache.profile_epoch,
+                    partitioned)
             self._submit_memo.put((id(plan), id(catalog)), memo)
-        _, _, key, scanned, _ = memo
+        _, _, key, scanned, _, partitioned = memo
         # ship only the tables the plan scans: the batched executor stacks
         # every leaf of every request, so catalog tables the query never
         # touches would be pure copy overhead on the dispatch path
         req = QueryRequest(rid=self._next_rid, plan=plan, catalog=catalog,
                            tables={k: tables[k] for k in scanned},
-                           key=key, submit_t=self.clock())
+                           key=key, submit_t=self.clock(),
+                           partitioned=partitioned)
         self._next_rid += 1
         sig = self.signatures.get(req.key)
         if sig is None:
@@ -165,6 +196,12 @@ class QueryServer:
             sig.dispatches += 1
             sig.served_requests += len(batch)
             sig.total_dispatch_s += dt
+            if batch.sharded:
+                sig.sharded_dispatches += 1
+                sig.ways = self._ways
+            if batch.partitioned:
+                sig.partitioned_dispatches += 1
+                sig.ways = self._ways
             for req in batch.requests:
                 sig.total_wait_s += req.queue_wait_s
                 if req.batch_size >= 2:
@@ -188,6 +225,7 @@ class QueryServer:
             "groups_formed": self.batcher.groups_formed,
             "dispatches": total_disp,
             "sharded_dispatches": self.executor.sharded_dispatches,
+            "partitioned_dispatches": self.executor.partitioned_dispatches,
             "mean_occupancy": (self.completed / total_disp
                                if total_disp else 0.0),
             "cache": self.cache.stats.as_dict(),

@@ -1,0 +1,290 @@
+"""Standalone partitioned-operator equivalence checker (fresh process).
+
+Proves, under a forced 8-device host mesh, that intra-query-partitioned
+physical plans (the PartSpec layer: PCrossJoin by left rows, PJoin by probe
+rows or hash bucket, pipelines/ML nodes by row block, with explicit
+PRepartition collectives) equal the single-device reference on every one of
+the 12 workload templates — valid masks and integer columns exactly, float
+columns to the established 2e-5 tolerance — in BOTH partitioning flavors
+(maximal row-block; hash-bucketed joins where a join exists). Also checks:
+
+* skewed joins: all keys in one hash bucket, empty buckets, non-dividing
+  row counts (the static-shape soundness corners of bucket partitioning);
+* an R3-rewritten plan (BlockedMatmul/ForestRelational nodes) partitioned
+  by row block;
+* the memory-budget path end to end: a per-device budget below rec_q1's
+  unpartitioned ``phys_peak_memory`` makes costed lowering select a
+  partitioned plan that fits, and ``QueryServer`` serves the oversized
+  query through ``get_or_compile_partitioned`` with the PartSpec vector
+  visible in ``PlanCache.key()``.
+
+Runs as ``__main__`` in a subprocess because the 8-device host platform
+must be forced via XLA_FLAGS *before* jax initializes its backend.
+``tests/test_partitioned.py`` spawns it; by hand:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python tests/partitioned_equality_driver.py
+"""
+from __future__ import annotations
+
+import sys
+
+SCALE = 0.25
+MIN_DEVICES = 8
+
+
+def _assert_tables_equal(ref, out, label):
+    import numpy as np
+
+    assert set(ref) == set(out), f"{label}: schema {set(ref) ^ set(out)}"
+    for k in ref:
+        a, b = ref[k], out[k]
+        assert a.shape == b.shape, f"{label}:{k} {a.shape} vs {b.shape}"
+        if np.issubdtype(a.dtype, np.integer) or a.dtype == bool:
+            np.testing.assert_array_equal(a, b, err_msg=f"{label}:{k}")
+        else:
+            np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5,
+                                       err_msg=f"{label}:{k}")
+
+
+def _run_partitioned(pplan, tables, mesh):
+    import jax
+
+    from repro.core import mesh as mesh_util
+    from repro.core import physical as ph
+
+    fn = mesh_util.shard_replicated(
+        lambda t: ph.run(pplan, t, axis=mesh_util.DATA_AXIS), mesh)
+    return jax.jit(fn)(tables)
+
+
+def check_workload(name: str, mesh, ways: int) -> None:
+    """Both partitioning flavors of every workload equal the reference."""
+    from repro.core import cost, executor, stage_graph
+    from repro.data import workloads
+
+    w = workloads.ALL_WORKLOADS[name](scale=SCALE)
+    ref = executor.execute_reference(w.plan, w.catalog).canonical()
+    profile = cost.DeviceProfile.detect()
+    g = stage_graph.build(w.plan, w.catalog, profile=profile, ways=ways)
+    part_sites = [s for s in g.sites.values() if s.kind == "part"]
+    assert part_sites, f"{name}: no partition sites at ways={ways}"
+
+    flavors = {"row": g.partitioned_decisions()}
+    if any(len(s.options) > 2 for s in part_sites):  # joins offer hash too
+        d = g.default_decisions()
+        for s in part_sites:
+            d[s.sid] = len(s.options) - 1  # hash for joins, row otherwise
+        flavors["hash"] = d
+
+    for flavor, d in flavors.items():
+        pplan = g.realize(d)
+        assert pplan.ways == ways and pplan.parts, (name, flavor)
+        out = _run_partitioned(pplan, dict(w.catalog.tables), mesh).canonical()
+        _assert_tables_equal(ref, out, f"{name}/{flavor}")
+        print(f"{name}/{flavor}: OK", flush=True)
+
+
+def check_r3_realizations(mesh, ways: int) -> None:
+    """Row-block-partitioned PBlockedMatmul / PForestRelational (the R3
+    rewrites' realizations) equal the reference."""
+    from repro.core import cost, executor, stage_graph
+    from repro.core.rules import ALL_RULES
+    from repro.data import workloads
+
+    profile = cost.DeviceProfile.detect()
+    for name, rule in (("rec_q3", "R3-1"), ("analytics_q1", "R3-2")):
+        w = workloads.ALL_WORKLOADS[name](scale=SCALE)
+        cfgs = ALL_RULES[rule].configs(w.plan, w.catalog)
+        assert cfgs, f"{rule} must apply to {name}"
+        plan = ALL_RULES[rule].apply(w.plan, w.catalog, cfgs[0])
+        ref = executor.execute_reference(plan, w.catalog).canonical()
+        g = stage_graph.build(plan, w.catalog, profile=profile, ways=ways)
+        pplan = g.realize(g.partitioned_decisions())
+        from repro.core import physical as ph
+        mls = [n for n in _walk(pplan.root)
+               if isinstance(n, (ph.PBlockedMatmul, ph.PForestRelational))]
+        assert mls, name
+        out = _run_partitioned(pplan, dict(w.catalog.tables),
+                               mesh).canonical()
+        _assert_tables_equal(ref, out, f"{name}/{rule}/row")
+        print(f"{name}/{rule}: OK", flush=True)
+
+
+def _walk(node):
+    yield node
+    for c in node.children():
+        yield from _walk(c)
+
+
+def check_skewed_joins(mesh, ways: int) -> None:
+    """Hash-bucketed PJoin and row-partitioned PJoin/PCrossJoin on
+    adversarial key distributions: every key in one bucket, buckets with no
+    keys, and row counts the device count doesn't divide."""
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.core import mesh as mesh_util
+    from repro.core import physical as ph
+    from repro.relational import ops
+    from repro.relational.table import Table
+
+    rng = np.random.default_rng(7)
+    cases = {
+        # 21 % 8 == 5: every key lands in bucket 5, one device does it all
+        "all-one-bucket": np.full(37, 21, np.int32),
+        # keys congruent 3 mod 8: buckets other than 3 stay empty
+        "empty-buckets": (rng.integers(0, 3, 41) * 8 + 3).astype(np.int32),
+        # plain non-uniform keys over a non-dividing row count
+        "uniform-53": rng.integers(0, 100, 53).astype(np.int32),
+    }
+    for label, keys in cases.items():
+        n = len(keys)
+        lt = Table.from_columns(
+            {"k": jnp.asarray(keys),
+             "v": jnp.asarray(rng.standard_normal(n), jnp.float32)},
+            valid=jnp.asarray(rng.random(n) < 0.8))
+        rkeys = np.unique(np.concatenate(
+            [keys, np.arange(6, dtype=np.int32)]))
+        rt = Table.from_columns(
+            {"rk": jnp.asarray(rkeys),
+             "w": jnp.asarray(rng.standard_normal(len(rkeys)), jnp.float32)})
+        tables = {"L": lt, "R": rt}
+        ref = ops.fk_join(lt, rt, "k", "rk", "r_")
+        blk = mesh_util.row_block(lt.capacity, ways)
+
+        variants = {
+            "hash": ph.PRepartition(
+                ph.PJoin(
+                    left=ph.PRepartition(ph.PScan("L"), op="bucket",
+                                         ways=ways, in_capacity=lt.capacity,
+                                         out_capacity=lt.capacity, key="k"),
+                    right=ph.PRepartition(ph.PScan("R"), op="bucket",
+                                          ways=ways, in_capacity=rt.capacity,
+                                          out_capacity=rt.capacity,
+                                          key="rk"),
+                    left_key="k", right_key="rk", rprefix="r_"),
+                op="combine", ways=ways, in_capacity=lt.capacity,
+                out_capacity=lt.capacity),
+            "row": ph.PRepartition(
+                ph.PJoin(
+                    left=ph.PRepartition(ph.PScan("L"), op="slice",
+                                         ways=ways, in_capacity=lt.capacity,
+                                         out_capacity=blk),
+                    right=ph.PScan("R"),
+                    left_key="k", right_key="rk", rprefix="r_"),
+                op="allgather", ways=ways, in_capacity=blk,
+                out_capacity=lt.capacity),
+        }
+        for flavor, root in variants.items():
+            pplan = ph.PhysicalPlan(root=root, registry=None, ways=ways)
+            out = _run_partitioned(pplan, tables, mesh)
+            np.testing.assert_array_equal(np.asarray(ref.valid),
+                                          np.asarray(out.valid),
+                                          err_msg=f"{label}/{flavor}.valid")
+            m = np.asarray(ref.valid)
+            for c in ref.columns:  # invalid rows carry garbage: mask-aware
+                np.testing.assert_allclose(
+                    np.asarray(ref[c])[m], np.asarray(out[c])[m],
+                    rtol=2e-5, atol=2e-5, err_msg=f"{label}/{flavor}.{c}")
+
+        # row-partitioned cross join over the same non-dividing tables
+        ref_x = ops.cross_join(lt, rt, "a_", "b_")
+        root = ph.PRepartition(
+            ph.PCrossJoin(
+                left=ph.PRepartition(ph.PScan("L"), op="slice", ways=ways,
+                                     in_capacity=lt.capacity,
+                                     out_capacity=blk),
+                right=ph.PScan("R"), aprefix="a_", bprefix="b_"),
+            op="allgather", ways=ways, in_capacity=blk * rt.capacity,
+            out_capacity=lt.capacity * rt.capacity)
+        out = _run_partitioned(
+            ph.PhysicalPlan(root=root, registry=None, ways=ways), tables,
+            mesh)
+        np.testing.assert_array_equal(np.asarray(ref_x.valid),
+                                      np.asarray(out.valid),
+                                      err_msg=f"{label}/xjoin.valid")
+        m = np.asarray(ref_x.valid)
+        for c in ref_x.columns:
+            np.testing.assert_allclose(
+                np.asarray(ref_x[c])[m], np.asarray(out[c])[m],
+                rtol=2e-5, atol=2e-5, err_msg=f"{label}/xjoin.{c}")
+        print(f"skew {label}: OK", flush=True)
+
+
+def check_budgeted_serving(mesh, ways: int) -> None:
+    """A per-device budget below the unpartitioned working set routes the
+    oversized query through the partitioned path, end to end."""
+    import numpy as np
+
+    from repro.core import cost, costed_lowering, executor, stage_graph
+    from repro.data import workloads
+    from repro.serving import QueryServer
+
+    w = workloads.ALL_WORKLOADS["retail_q3"](scale=SCALE)
+    profile = cost.DeviceProfile.detect()
+    g = stage_graph.build(w.plan, w.catalog, profile=profile, ways=ways)
+    peak_rep = cost.phys_peak_memory(g.realize(g.default_decisions()),
+                                     w.catalog, profile)
+    peak_part = cost.phys_peak_memory(g.realize(g.partitioned_decisions()),
+                                      w.catalog, profile)
+    assert peak_part < peak_rep, (peak_part, peak_rep)
+    budget = (peak_part + peak_rep) / 2.0
+
+    # costed lowering under the budget picks a partitioned plan that fits
+    low = costed_lowering.lower_costed(w.plan, w.catalog, profile=profile,
+                                       memory_budget=budget, ways=ways)
+    assert low.plan.ways == ways and low.plan.parts, low.signature
+    assert low.peak_memory <= budget
+    assert low.budget_pruned > 0 and not low.budget_pruned_all
+
+    # ...and the server serves the oversized query through it
+    srv = QueryServer(max_batch_size=4, max_wait_s=3600.0, mesh=mesh,
+                      memory_budget=budget)
+    req = srv.submit(w.plan, w.catalog)
+    assert req.partitioned
+    assert "#be=part" in req.key and "#mesh=" in req.key
+    assert any(tok.startswith("pt") for tok in
+               req.key.split("#cl=")[1].split(";")), req.key
+    assert req.key == srv.cache.key(w.plan, w.catalog, mesh=mesh)
+    assert srv.drain() == 1 and req.error is None, req.error
+    assert srv.stats()["partitioned_dispatches"] == 1
+    ref = executor.execute_reference(w.plan, w.catalog).canonical()
+    _assert_tables_equal(ref, req.result.canonical(), "served-oversized")
+
+    # repeated traffic of the signature hits the same compiled executable
+    t0 = srv.cache.traces
+    req2 = srv.submit(w.plan, w.catalog,
+                      workloads.roll_tables(dict(w.catalog.tables), 1))
+    assert srv.drain() == 1 and req2.error is None
+    assert srv.cache.traces == t0, "warm partitioned dispatch re-traced"
+    assert np.asarray(req2.result.valid).sum() > 0
+    print("budgeted serving: OK", flush=True)
+
+
+def main() -> int:
+    import jax
+
+    from repro.core import mesh as mesh_util
+    from repro.data import workloads
+
+    n = len(jax.devices())
+    if n < MIN_DEVICES:
+        print(f"FAIL: need >= {MIN_DEVICES} devices, have {n} "
+              f"(set XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+        return 2
+    mesh = mesh_util.data_mesh(MIN_DEVICES)
+    ways = mesh_util.batch_ways(mesh)
+    for name in sorted(workloads.ALL_WORKLOADS):
+        check_workload(name, mesh, ways)
+    print(f"all {len(workloads.ALL_WORKLOADS)} workloads: "
+          f"partitioned == reference")
+    check_r3_realizations(mesh, ways)
+    check_skewed_joins(mesh, ways)
+    check_budgeted_serving(mesh, ways)
+    print("partitioned driver: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -227,8 +227,8 @@ def test_choose_batch_realization_costed():
         mesh = mesh_util.data_mesh()
         ways = mesh_util.batch_ways(mesh)
         b = 2 * ways
-        # default profiles have zero collective overhead: sharding an
-        # eligible batch is always predicted to pay
+        # default collective priors are small (non-zero, so collectives are
+        # never free): sharding an eligible batch is still predicted to pay
         assert costed_lowering.choose_batch_realization(
             w.plan, w.catalog, b, mesh) == "sharded"
         # a profile whose per-shard collective overhead dwarfs the work
